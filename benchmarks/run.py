@@ -1,0 +1,24 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.paper_figures import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        t0 = time.time()
+        try:
+            rows = bench()
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

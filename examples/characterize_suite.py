@@ -1,0 +1,34 @@
+"""Reproduce the paper's characterization tables for the full eight-model
+suite (abstract tracing — runs in ~1 minute on CPU, no memory).
+
+    PYTHONPATH=src:. python examples/characterize_suite.py
+"""
+
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.workloads import suite_events  # noqa: E402
+from repro.configs.suite import SUITE  # noqa: E402
+from repro.core import amdahl, perf_model, prefill_decode, seq_profile  # noqa: E402
+
+
+def main():
+    print(f"{'model':18s} {'regime':13s} {'attn% base':>10s} {'attn% FA':>9s} "
+          f"{'FA e2e':>7s} {'seq var':>8s}")
+    for name in SUITE:
+        base = list(suite_events(name, "naive"))
+        flash = list(suite_events(name, "blocked_jax"))
+        fb = perf_model.breakdown_fraction(base)
+        t_base = perf_model.total_time(base)
+        ff_abs = perf_model.breakdown(flash)
+        rep = amdahl.flash_speedup(base, flash)
+        regime = prefill_decode.classify(base)["regime"]
+        prof = seq_profile.profile(base)
+        print(f"{name:18s} {regime:13s} {fb.get('attention', 0):>9.1%} "
+              f"{ff_abs.get('attention', 0) / t_base:>8.1%} "
+              f"{rep.e2e_speedup:>6.2f}x {prof.variation:>7.1f}x")
+
+
+if __name__ == "__main__":
+    main()

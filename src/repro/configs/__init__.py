@@ -1,0 +1,87 @@
+"""Architecture registry — import side-effect registers every config.
+
+``get_config(name)`` resolves ``--arch`` ids; ``reduced(cfg)`` builds the
+CPU-smoke-test variant of any LM config (same family/block pattern, tiny
+dims).
+"""
+
+import dataclasses
+
+from repro.configs.base import (
+    LMConfig,
+    MoESpec,
+    SSMSpec,
+    EncoderSpec,
+    ShapeSpec,
+    SHAPES,
+    get_config,
+    list_configs,
+    register,
+)
+
+# assigned architectures
+from repro.configs import olmo_1b  # noqa: F401
+from repro.configs import qwen2_72b  # noqa: F401
+from repro.configs import glm4_9b  # noqa: F401
+from repro.configs import stablelm_3b  # noqa: F401
+from repro.configs import mamba2_780m  # noqa: F401
+from repro.configs import whisper_base  # noqa: F401
+from repro.configs import qwen2_vl_2b  # noqa: F401
+from repro.configs import qwen3_moe_30b_a3b  # noqa: F401
+from repro.configs import deepseek_moe_16b  # noqa: F401
+from repro.configs import recurrentgemma_9b  # noqa: F401
+
+ASSIGNED_ARCHS = [
+    "olmo-1b",
+    "qwen2-72b",
+    "glm4-9b",
+    "stablelm-3b",
+    "mamba2-780m",
+    "whisper-base",
+    "qwen2-vl-2b",
+    "qwen3-moe-30b-a3b",
+    "deepseek-moe-16b",
+    "recurrentgemma-9b",
+]
+
+
+def reduced(cfg: LMConfig) -> LMConfig:
+    """Tiny same-family config for CPU smoke tests (spec: 'small layers/width,
+    few experts, tiny embedding tables')."""
+    changes: dict = dict(
+        name=cfg.name + "-reduced",
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(4, max(1, cfg.n_kv_heads * 4 // max(cfg.n_heads, 1))),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe,
+            n_experts=8,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=32,
+            d_ff_shared=64 if cfg.moe.n_shared else 0,
+            # capacity covers the worst case so prefill==decode holds exactly
+            # in equivalence tests (no batch-dependent drops)
+            capacity_factor=8.0,
+        )
+        changes["d_ff"] = 128
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16, chunk=16)
+    if cfg.encoder is not None:
+        changes["encoder"] = dataclasses.replace(cfg.encoder, n_layers=2)
+    if cfg.window is not None:
+        changes["window"] = 8
+    if cfg.mrope_sections is not None:
+        changes["mrope_sections"] = (2, 3, 3)  # head_dim 16 -> D/2 = 8
+    return dataclasses.replace(cfg, **changes)
+
+
+__all__ = [
+    "LMConfig", "MoESpec", "SSMSpec", "EncoderSpec", "ShapeSpec", "SHAPES",
+    "get_config", "list_configs", "register", "reduced", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,214 @@
+"""Config dataclasses + the architecture/shape registry.
+
+Every assigned architecture is a :class:`LMConfig`; the paper-suite TTI/TTV
+models use their own config classes (``repro.models.diffusion`` /
+``repro.models.ar_image`` / ``repro.models.ttv``) but register here too so
+``--arch`` resolves uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sub-specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    first_k_dense: int = 0  # leading dense (non-MoE) layers (DeepSeekMoE: 1)
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Encoder stack for enc-dec models (whisper). Same width as decoder."""
+
+    n_layers: int
+    # the conv/log-mel frontend is a stub: inputs are precomputed frame
+    # embeddings of shape (B, enc_len(seq), d_model)
+    enc_len: Callable[[int], int] = staticmethod(lambda s: s)
+
+
+# ---------------------------------------------------------------------------
+# LM config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"  # rmsnorm | layernorm | nonparametric_ln
+    mlp_activation: str = "silu"
+    mlp_gated: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_base: float = 10000.0
+    rope_pct: float = 1.0  # partial rotary (StableLM)
+    mrope_sections: tuple | None = None  # Qwen2-VL
+    tie_embeddings: bool = False
+    window: int | None = None  # local attention window (hybrid archs)
+    # Per-layer block pattern, cycled to n_layers.
+    # Entries: "dense" | "moe" | "mamba2" | "rglru" | "local_attn"
+    block_pattern: tuple = ("dense",)
+    moe: MoESpec | None = None
+    ssm: SSMSpec | None = None
+    encoder: EncoderSpec | None = None
+    # inputs are embeddings rather than token ids (vlm stub frontend)
+    embed_inputs: bool = False
+    dtype: Any = jnp.float32
+    source: str = ""  # provenance: [arXiv/hf ref; verification tier]
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def block_types(self) -> tuple:
+        """Expanded per-layer block types of length n_layers."""
+        pattern = self.block_pattern
+        types = [pattern[i % len(pattern)] for i in range(self.n_layers)]
+        if self.moe is not None and self.moe.first_k_dense:
+            for i in range(self.moe.first_k_dense):
+                types[i] = "dense"
+        return tuple(types)
+
+    @property
+    def homogeneous(self) -> bool:
+        return len(set(self.block_types())) == 1
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if prefill cost is sub-quadratic in sequence length (SSM, or
+        hybrid whose attention is local-window)."""
+        types = set(self.block_types())
+        if types <= {"mamba2", "rglru"}:
+            return True
+        if "dense" in types or "moe" in types:
+            return False
+        # hybrid: attention blocks must be local-window
+        return types <= {"mamba2", "rglru", "local_attn"} and self.window is not None
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder is not None
+
+    def supports_shape(self, shape: "ShapeSpec") -> bool:
+        if shape.kind == "decode" and shape.seq_len > 65536 and not self.sub_quadratic:
+            return False  # long_500k: full-attention archs are skipped (DESIGN.md)
+        return True
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, V = self.d_model, self.vocab
+        H, KVH, hd = self.n_heads, self.n_kv_heads, self.resolved_head_dim
+        total = V * d  # embedding
+        if not self.tie_embeddings:
+            total += V * d
+        for t in self.block_types():
+            if t in ("dense", "moe", "local_attn"):
+                total += d * (H + 2 * KVH) * hd + H * hd * d  # attn
+            if t == "dense" or t == "local_attn":
+                mult = 3 if self.mlp_gated else 2
+                total += mult * d * self.d_ff
+            elif t == "moe":
+                m = self.moe
+                total += m.n_experts * 3 * d * m.d_ff_expert + d * m.n_experts
+                if m.n_shared:
+                    total += 3 * d * (m.d_ff_shared or m.n_shared * m.d_ff_expert)
+            elif t == "mamba2":
+                s = self.ssm
+                di = s.expand * d
+                nh = di // s.head_dim
+                total += d * (2 * di + 2 * s.d_state + nh) + di * d
+            elif t == "rglru":
+                drnn = d  # d_rnn = d_model in our Griffin configs
+                total += 3 * d * drnn + 2 * drnn * drnn
+                mult = 3 if self.mlp_gated else 2
+                total += mult * d * self.d_ff
+        if self.encoder is not None:
+            for _ in range(self.encoder.n_layers):
+                total += d * (H + 2 * KVH) * hd + H * hd * d
+                mult = 3 if self.mlp_gated else 2
+                total += mult * d * self.d_ff
+            # decoder cross-attn
+            total += self.n_layers * (d * (H + 2 * KVH) * hd + H * hd * d)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        all_experts = 3 * self.d_model * m.d_ff_expert * m.n_experts
+        active_experts = 3 * self.d_model * m.d_ff_expert * m.top_k
+        n_moe_layers = sum(1 for t in self.block_types() if t == "moe")
+        return int(full - n_moe_layers * (all_experts - active_experts))
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned 4-shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Any] = {}
+
+
+def register(config) -> None:
+    _REGISTRY[config.name] = config
+
+
+def get_config(name: str):
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    return sorted(_REGISTRY)

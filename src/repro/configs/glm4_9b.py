@@ -1,0 +1,25 @@
+"""glm4-9b [hf:THUDM/glm-4-9b] — dense, RoPE, GQA kv=2."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="glm4-9b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab=151552,
+    norm="rmsnorm",
+    mlp_activation="silu",
+    mlp_gated=True,
+    qkv_bias=True,  # add_qkv_bias in the upstream config
+    tie_embeddings=False,
+    dtype=jnp.float32,
+    source="[hf:THUDM/glm-4-9b]",
+)
+
+register(CONFIG)

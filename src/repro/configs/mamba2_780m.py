@@ -1,0 +1,30 @@
+"""mamba2-780m [arXiv:2405.21060; unverified] — attention-free SSD.
+
+48 layers of pure Mamba-2 mixer blocks (no MLP), d_state=128.  Runs the
+long_500k cell (sub-quadratic).  The paper's attention-centric technique is
+inapplicable here (DESIGN.md §Arch-applicability); the characterization
+framework still profiles it (op breakdown dominated by scan + linear).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, SSMSpec, register
+
+CONFIG = LMConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=1,  # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,  # no MLP block
+    vocab=50280,
+    norm="rmsnorm",
+    block_pattern=("mamba2",),
+    ssm=SSMSpec(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    tie_embeddings=True,
+    dtype=jnp.float32,
+    source="[arXiv:2405.21060; hf:state-spaces/mamba2-780m; unverified]",
+)
+
+register(CONFIG)

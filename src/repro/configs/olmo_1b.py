@@ -1,0 +1,25 @@
+"""olmo-1b [arXiv:2402.00838; hf] — dense, non-parametric LN."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="olmo-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=50304,
+    norm="nonparametric_ln",
+    mlp_activation="silu",
+    mlp_gated=True,
+    qkv_bias=False,
+    tie_embeddings=True,
+    dtype=jnp.float32,
+    source="[arXiv:2402.00838; hf:allenai/OLMo-1B]",
+)
+
+register(CONFIG)

@@ -1,0 +1,26 @@
+"""qwen2-72b [arXiv:2407.10671; hf] — dense, GQA kv=8, QKV bias."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab=152064,
+    norm="rmsnorm",
+    mlp_activation="silu",
+    mlp_gated=True,
+    qkv_bias=True,
+    rope_base=1e6,
+    tie_embeddings=False,
+    dtype=jnp.float32,
+    source="[arXiv:2407.10671; hf:Qwen/Qwen2-72B]",
+)
+
+register(CONFIG)

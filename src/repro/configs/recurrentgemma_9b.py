@@ -1,0 +1,32 @@
+"""recurrentgemma-9b [arXiv:2402.19427; unverified] — Griffin hybrid:
+RG-LRU + local attention in a 2:1 pattern, MQA (kv=1), window 2048.
+
+Sub-quadratic (local attention window + recurrent state) — runs long_500k.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    norm="rmsnorm",
+    mlp_activation="gelu",
+    mlp_gated=True,  # GeGLU
+    qkv_bias=False,
+    window=2048,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    tie_embeddings=True,
+    dtype=jnp.float32,
+    source="[arXiv:2402.19427; kaggle:recurrentgemma-9b; unverified]",
+)
+
+register(CONFIG)

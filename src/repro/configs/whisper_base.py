@@ -1,0 +1,32 @@
+"""whisper-base [arXiv:2212.04356; unverified] — enc-dec audio backbone.
+
+The conv/log-mel frontend is a stub per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model).  Encoder is
+bidirectional; decoder is causal with cross-attention.  Decode shapes run
+(decoder KV cache + cross-attn over encoder output).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import EncoderSpec, LMConfig, register
+
+CONFIG = LMConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,  # decoder layers
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    norm="layernorm",
+    mlp_activation="gelu",
+    mlp_gated=False,
+    qkv_bias=True,
+    encoder=EncoderSpec(n_layers=6),
+    tie_embeddings=True,
+    dtype=jnp.float32,
+    source="[arXiv:2212.04356; hf:openai/whisper-base; unverified]",
+)
+
+register(CONFIG)

@@ -1,0 +1,26 @@
+"""The paper's primary contribution as a library: a system-characterization
+framework for multi-modal (TTI/TTV/LM) generation workloads.
+
+Modules:
+  tracer         — operator-event recording at trace time (the PyTorch
+                   Profiler + hooks analogue, §III Tools)
+  perf_model     — per-op roofline-modeled time; Fig. 6 breakdowns
+  amdahl         — Flash-Attention speedup decomposition (Table II, §IV-B)
+  prefill_decode — Table III prefill/decode correspondence
+  seq_profile    — §V sequence-length profiling (Fig. 7/8)
+  analytical     — §V closed-form memory/FLOPs model, O(L^4) law
+  hlo_analysis   — compiled-artifact analysis (collective bytes, cost, memory)
+  roofline       — §Roofline three-term analysis of dry-run artifacts
+  characterize   — eval_shape-based tracing entry points
+"""
+
+from repro.core import (  # noqa: F401
+    amdahl,
+    analytical,
+    characterize,
+    hlo_analysis,
+    perf_model,
+    prefill_decode,
+    seq_profile,
+    tracer,
+)

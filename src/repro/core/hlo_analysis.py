@@ -1,0 +1,117 @@
+"""Compiled-HLO analysis: collective bytes, cost/memory summaries.
+
+The TPU-native replacement for the paper's Nsight kernel counters: everything
+here reads the artifacts of ``jit(...).lower(...)`` / ``.compile()``.
+``collective_bytes`` is not in ``cost_analysis()`` so it is parsed from the
+(stable)HLO text: we sum the output-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op, with a
+ring-algorithm wire factor per op type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# wire-traffic multiplier (ring algorithms): all-reduce moves ~2x the data
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: dict
+    count_by_type: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_type.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(
+            b * _WIRE_FACTOR.get(t, 1.0) for t, b in self.bytes_by_type.items()
+        )
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_type: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        by_type[op] += _shape_bytes(type_str)
+        counts[op] += 1
+    return CollectiveStats(dict(by_type), dict(counts))
+
+
+def cost_summary(compiled) -> dict:
+    """Normalize compiled.cost_analysis() across jax versions -> dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = getattr(ma, k)
+    out["total_bytes"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+    )
+    return out
+
+
+def op_histogram(hlo_text: str) -> dict:
+    """Instruction-count histogram by HLO opcode (remat/redundancy smell test:
+    duplicate convolution/dot counts beyond the model's layer count indicate
+    recompute)."""
+    counts: dict = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s*([a-z][a-z0-9-]*)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return dict(counts)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, SyntheticTTIData, make_batch_iterator
+
+__all__ = ["SyntheticLMData", "SyntheticTTIData", "make_batch_iterator"]

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import attention, temporal_attention
+
+__all__ = ["attention", "temporal_attention"]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for (flash) attention.
+
+This is the ground truth every other implementation (pallas, interpret,
+blocked_jax, naive) is validated against.  Computed in fp32 regardless of
+input dtype, then cast back.
+
+Shapes follow the framework-wide convention:
+    q:      (B, Sq, H, D)
+    k, v:   (B, Skv, KVH, D)     with H % KVH == 0 (GQA)
+    out:    (B, Sq, H, D)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(
+    sq: int,
+    skv: int,
+    *,
+    causal: bool,
+    window: int | None,
+    kv_offset: int = 0,
+) -> jnp.ndarray | None:
+    """Additive mask (sq, skv).  ``kv_offset`` shifts query positions, used in
+    decode where the single query sits at absolute position ``kv_offset``."""
+    if not causal and window is None:
+        return None
+    rows = jnp.arange(sq)[:, None] + kv_offset
+    cols = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= rows - cols < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    kv_offset: int = 0,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Reference attention. ``kv_len`` optionally masks trailing KV positions
+    (per-batch valid lengths, shape (B,)), used by decode with a cache."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    assert H % KVH == 0, (H, KVH)
+    group = H // KVH
+    scale = scale if scale is not None else D**-0.5
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=2)
+        vf = jnp.repeat(vf, group, axis=2)
+
+    # (B, H, Sq, Skv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    bias = _mask_bias(Sq, Skv, causal=causal, window=window, kv_offset=kv_offset)
+    if bias is not None:
+        s = s + bias[None, None]
+    if kv_len is not None:
+        valid = jnp.arange(Skv)[None, None, None, :] < kv_len[:, None, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def temporal_attention_ref(x_q, x_k, x_v, *, scale: float | None = None):
+    """Temporal attention oracle.
+
+    Inputs are in the *spatial layout* the TTV UNet produces:
+        (B, F, HW, H, D)   — frames F is the attended ("sequence") axis.
+
+    The conventional implementation permutes to (B*HW, F, H, D) and calls
+    standard attention; this oracle does exactly that.
+    """
+    B, F, HW, H, D = x_q.shape
+    perm = lambda t: t.transpose(0, 2, 1, 3, 4).reshape(B * HW, F, H, D)
+    out = attention_ref(perm(x_q), perm(x_k), perm(x_v), causal=False, scale=scale)
+    return out.reshape(B, HW, F, H, D).transpose(0, 2, 1, 3, 4)

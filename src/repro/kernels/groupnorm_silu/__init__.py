@@ -1,0 +1,3 @@
+from repro.kernels.groupnorm_silu.ops import groupnorm_silu
+
+__all__ = ["groupnorm_silu"]

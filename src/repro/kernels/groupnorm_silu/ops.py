@@ -1,0 +1,48 @@
+"""Dispatching wrapper for fused GroupNorm + SiLU."""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.groupnorm_silu import ref as _ref
+from repro.kernels.groupnorm_silu.groupnorm_silu import groupnorm_silu_pallas
+
+Impl = Literal["auto", "pallas", "interpret", "jax"]
+
+
+def groupnorm_silu(
+    x: jax.Array,  # (B, N, C) or (B, H, W, C)
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    groups: int,
+    eps: float = 1e-5,
+    silu: bool = True,
+    impl: Impl = "auto",
+    block_n: int = 1024,
+) -> jax.Array:
+    orig_shape = x.shape
+    if x.ndim == 4:
+        B, H, W, C = x.shape
+        x = x.reshape(B, H * W, C)
+    B, N, C = x.shape
+
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jax"
+    if impl == "jax":
+        out = _ref.groupnorm_silu_ref(x, scale, bias, groups=groups, eps=eps, silu=silu)
+        return out.reshape(orig_shape)
+
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0)])
+    out = groupnorm_silu_pallas(
+        x, scale, bias,
+        groups=groups, eps=eps, silu=silu, n_valid=N,
+        block_n=bn, interpret=(impl == "interpret"),
+    )
+    return out[:, :N].reshape(orig_shape)

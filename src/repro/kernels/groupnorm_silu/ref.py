@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for fused GroupNorm + SiLU.
+
+Layout: x (B, N, C) where N = H*W (flattened spatial), channels last (NHWC
+convention, the TPU-native conv layout).  ``scale``/``bias``: (C,).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def groupnorm_silu_ref(
+    x: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    groups: int,
+    eps: float = 1e-5,
+    silu: bool = True,
+) -> jax.Array:
+    B, N, C = x.shape
+    assert C % groups == 0, (C, groups)
+    xf = x.astype(jnp.float32).reshape(B, N, groups, C // groups)
+    mean = jnp.mean(xf, axis=(1, 3), keepdims=True)
+    var = jnp.var(xf, axis=(1, 3), keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, N, C) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    if silu:
+        y = y * jax.nn.sigmoid(y)
+    return y.astype(x.dtype)

@@ -1,0 +1,351 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the fake-device flag before ANY jax import (jax locks the device
+count on first init), hence the first two lines.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. builds the jitted step (train_step / prefill_step / serve_step) with
+     FSDP+TP+EP in_shardings from the logical rules,
+  3. ``.lower(**input_specs).compile()`` — proving the distribution config is
+     coherent (sharding divisibility, collective legality, no OOM at compile),
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / collective stats
+     into results JSON consumed by EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config  # noqa: E402
+from repro.configs.suite import with_dtype  # noqa: E402
+from repro.core import hlo_analysis, roofline  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
+from repro.models.transformer import TransformerLM  # noqa: E402
+from repro.training.optimizer import adamw_init  # noqa: E402
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "results", "dryrun.json")
+
+
+def _res_path(path=None):
+    p = path or os.path.abspath(RESULTS_PATH)
+    os.makedirs(os.path.dirname(p), exist_ok=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Scan-trip-count correction.
+#
+# XLA's HloCostAnalysis visits a while-loop body ONCE, so the reported FLOPs /
+# bytes / collective counts of a scanned N-layer model are depth-independent.
+# Fix: lower two *unrolled* shallow variants (n_a, n_b whole pattern cycles),
+# fit the per-layer term linearly, extrapolate to the true depth.  This is
+# exact for homogeneous stacks and whole-cycle-linear for hybrids.
+# ---------------------------------------------------------------------------
+
+
+def _shallow_pair(cfg) -> tuple[int, int]:
+    pat = max(1, len(cfg.block_pattern))
+    fk = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    n_a = fk + pat
+    return n_a, n_a + pat
+
+
+def _shallow_cfg(cfg, n: int):
+    changes = {"n_layers": n, "name": f"{cfg.name}-depth{n}"}
+    if cfg.encoder is not None:
+        enc_n = max(1, round(cfg.encoder.n_layers * n / cfg.n_layers))
+        changes["encoder"] = dataclasses.replace(cfg.encoder, n_layers=enc_n)
+    return dataclasses.replace(cfg, **changes)
+
+
+def default_microbatches(shape, mesh, *, target_tokens: int = 4096) -> int:
+    """Gradient-accumulation factor keeping <= target tokens/device/microbatch
+    (the production memory knob; B/mb must stay divisible by the DP width)."""
+    if shape.kind != "train":
+        return 1
+    from repro.parallel import sharding as shlib
+
+    shards = 1
+    for a in shlib.batch_axes(mesh):
+        shards *= mesh.shape[a]
+    local_tokens = shape.global_batch * shape.seq_len // max(shards, 1)
+    mb = 1
+    while (local_tokens // mb > target_tokens
+           and shape.global_batch % (mb * 2) == 0
+           and (shape.global_batch // (mb * 2)) % shards == 0):
+        mb *= 2
+    return mb
+
+
+def _lower_for(cfg, shape, mesh, *, impl, remat, unroll, microbatches=None):
+    model = TransformerLM(cfg)
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = steps_lib.param_shardings(model, mesh)
+    batch_abs, batch_sh = steps_lib.input_specs(cfg, shape, mesh)
+    if microbatches is None:
+        microbatches = default_microbatches(shape, mesh)
+    with mesh:
+        if shape.kind == "train":
+            step, (p_sh2, o_sh), out_sh = steps_lib.make_train_step(
+                model, cfg, mesh, remat=remat, impl=impl, unroll=unroll,
+                microbatches=microbatches,
+            )
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            jitted = jax.jit(step, in_shardings=(p_sh2, o_sh, batch_sh),
+                             out_shardings=out_sh, donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model, cfg, mesh, impl=impl,
+                                               unroll=unroll)
+            out_abs = jax.eval_shape(step, params_abs, batch_abs)
+            logits_sh = steps_lib.shlib.batch_sharding_for(
+                mesh, shape.global_batch, 3
+            )
+            out_sh = (
+                logits_sh,
+                steps_lib.cache_shardings(out_abs[1], mesh, shape.global_batch,
+                                          layout="prefill"),
+            )
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:
+            step = steps_lib.make_serve_step(model, cfg, mesh, impl=impl,
+                                             unroll=unroll)
+            caches_abs = steps_lib.abstract_cache(
+                model, shape.global_batch, shape.seq_len
+            )
+            c_sh = steps_lib.cache_shardings(caches_abs, mesh, shape.global_batch)
+            cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+            args = [params_abs, batch_abs["token"], caches_abs, cur_len]
+            in_sh = [p_sh, batch_sh["token"], c_sh, NamedSharding(mesh, P())]
+            if "context" in batch_abs:
+                args.append(batch_abs["context"])
+                in_sh.append(batch_sh["context"])
+            logits_sh = steps_lib.shlib.batch_sharding_for(
+                mesh, shape.global_batch, 3
+            )
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             out_shardings=(logits_sh, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _terms(compiled) -> dict:
+    cost = hlo_analysis.cost_summary(compiled)
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.wire_bytes),
+    }
+
+
+def depth_correction(arch: str, shape_name: str, *, impl: str, remat: str,
+                     multi_pod: bool = False, microbatches=None) -> dict:
+    """Per-layer terms from two shallow UNROLLED lowers -> corrected totals.
+
+    Gradient accumulation is a while loop too (cost-counted once), so the
+    shallow variants lower ONE microbatch (global_batch/mb, microbatches=1)
+    and the fitted terms are scaled back by mb."""
+    cfg = with_dtype(get_config(arch), jnp.bfloat16)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mb = (microbatches if microbatches is not None
+          else default_microbatches(shape, mesh))
+    shape_mb = dataclasses.replace(shape, global_batch=shape.global_batch // mb)
+    n_a, n_b = _shallow_pair(cfg)
+    t = {}
+    for n in (n_a, n_b):
+        _, compiled = _lower_for(_shallow_cfg(cfg, n), shape_mb, mesh,
+                                 impl=impl, remat=remat, unroll=True,
+                                 microbatches=1)
+        t[n] = _terms(compiled)
+    n_full = cfg.n_layers
+    out = {"n_a": n_a, "n_b": n_b, "n_full": n_full, "mb": mb}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = (t[n_b][k] - t[n_a][k]) / (n_b - n_a)
+        fixed = t[n_a][k] - n_a * per_layer
+        out[k] = max(fixed + n_full * per_layer, t[n_b][k]) * mb
+        out[f"{k}_per_layer"] = per_layer * mb
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               impl: str = "blocked_jax", remat: str = "dots",
+               profile: str = "2d", correct: bool = True,
+               microbatches: int | None = None,
+               verbose: bool = True) -> dict:
+    """Lower+compile one cell; returns the result record."""
+    from repro.parallel import sharding as shlib
+
+    shlib.set_profile(profile)
+    cfg = with_dtype(get_config(arch), jnp.bfloat16)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "impl": impl, "remat": remat, "profile": profile, "status": "pending",
+    }
+    if not cfg.supports_shape(shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch at 500k (sub-quadratic required)"
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["microbatches"] = (microbatches if microbatches is not None
+                           else default_microbatches(shape, mesh))
+    lowered, compiled = _lower_for(cfg, shape, mesh, impl=impl, remat=remat,
+                                   unroll=False, microbatches=microbatches)
+    t_compile = time.time() - t0
+
+    mem = hlo_analysis.memory_summary(compiled)
+    cost = hlo_analysis.cost_summary(compiled)
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    mf = roofline.model_flops_for(cfg, shape)
+    rep = roofline.analyze(
+        arch=arch, shape=shape_name, mesh_name=mesh_name,
+        n_chips=mesh_chips(mesh), lowered_text=compiled.as_text(),
+        compiled=compiled, model_flops=mf,
+    )
+
+    # depth-exact correction of the scan-once cost-analysis artifact
+    if correct:
+        corr = depth_correction(arch, shape_name, impl=impl, remat=remat,
+                                multi_pod=multi_pod,  # profile already set
+                                microbatches=microbatches)
+        rep.hlo_flops = corr["flops"]
+        rep.hlo_bytes = corr["bytes"]
+        rep.collective_bytes = corr["coll"]
+        from repro.core.perf_model import TPU_V5E as hw
+
+        rep.compute_s = corr["flops"] / hw.peak_flops
+        rep.memory_s = corr["bytes"] / hw.hbm_bw
+        rep.collective_s = corr["coll"] / hw.ici_bw
+        rep.useful_ratio = mf / max(corr["flops"] * rep.n_chips, 1.0)
+        rec["depth_correction"] = corr
+
+    rec.update(
+        status="ok",
+        compile_s=round(t_compile, 1),
+        memory=mem,
+        flops=rep.hlo_flops,
+        bytes_accessed=rep.hlo_bytes,
+        collective_bytes=coll.total_bytes,
+        collective_wire_bytes=rep.collective_bytes,
+        collectives=coll.count_by_type,
+        roofline=rep.to_dict(),
+    )
+    if verbose:
+        hbm_gb = mem.get("total_bytes", 0) / 2**30
+        print(
+            f"  [{arch} x {shape_name} x {mesh_name}] OK "
+            f"compile {t_compile:.0f}s | "
+            f"mem/device {hbm_gb:.2f} GiB | flops {rec['flops']:.3e} | "
+            f"coll {rep.collective_bytes/2**30:.2f} GiB | dominant {rep.dominant} | "
+            f"roofline {rep.roofline_fraction:.3f}",
+            flush=True,
+        )
+    return rec
+
+
+def load_results(path) -> list:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return []
+
+
+def save_result(rec: dict, path) -> None:
+    results = load_results(path)
+    results = [
+        r for r in results
+        if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                and r["mesh"] == rec["mesh"] and r.get("impl") == rec.get("impl")
+                and r.get("remat") == rec.get("remat")
+                and r.get("profile", "2d") == rec.get("profile", "2d"))
+    ]
+    results.append(rec)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape id")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--impl", default="blocked_jax")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the depth-extrapolation cost correction")
+    ap.add_argument("--profile", default="2d",
+                    help="sharding profile: 2d (FSDP+TP) | fsdp (ZeRO-only)")
+    args = ap.parse_args()
+
+    out_path = _res_path(args.out)
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    done = {
+        (r["arch"], r["shape"], r["mesh"])
+        for r in load_results(out_path)
+        if r.get("status") in ("ok", "skipped")
+    } if args.skip_done else set()
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                if (arch, shape, mesh_name) in done:
+                    print(f"  [{arch} x {shape} x {mesh_name}] cached, skip",
+                          flush=True)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     impl=args.impl, remat=args.remat,
+                                     profile=args.profile,
+                                     correct=not args.no_correct and not mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "impl": args.impl, "remat": args.remat,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"  [{arch} x {shape} x {mesh_name}] "
+                          f"ERROR {type(e).__name__}: {e}", flush=True)
+                save_result(rec, out_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""§Perf hillclimbing driver: run named optimization variants for the three
+selected cells, record before/after roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell glm4_prefill
+    PYTHONPATH=src python -m repro.launch.hillclimb --all
+
+Each variant is one hypothesis->change->measure iteration; EXPERIMENTS.md
+§Perf narrates the hypotheses and verdicts against results/hillclimb.json.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import traceback  # noqa: E402
+
+from repro.launch import dryrun as dr  # noqa: E402
+
+OUT = "results/hillclimb.json"
+
+# cell -> list of (iteration_name, kwargs for lower_cell / overrides)
+PLAYBOOK = {
+    # most collective-bound cell; also the paper-representative prefill regime
+    "glm4_prefill": {
+        "arch": "glm4-9b",
+        "shape": "prefill_32k",
+        "variants": [
+            ("baseline_2d", dict(profile="2d", remat="full")),
+            ("fsdp_profile", dict(profile="fsdp", remat="full")),
+            ("attn_head_sharded", dict(profile="2d", remat="full")),
+            ("proj_constrained", dict(profile="2d", remat="full")),
+            ("kv_replicated", dict(profile="2d", remat="full")),
+        ],
+    },
+    # worst roofline fraction + over-budget memory
+    "qwen2_decode": {
+        "arch": "qwen2-72b",
+        "shape": "decode_32k",
+        "variants": [
+            ("baseline_2d", dict(profile="2d", remat="full")),
+            ("fsdp_profile", dict(profile="fsdp", remat="full")),
+        ],
+    },
+    # collective-bound small-model train: sharding-profile crossover
+    "olmo_train": {
+        "arch": "olmo-1b",
+        "shape": "train_4k",
+        "variants": [
+            ("baseline_2d_mb16", dict(profile="2d", remat="full")),
+            ("fsdp_mb16", dict(profile="fsdp", remat="full")),
+            ("fsdp_mb16_dots", dict(profile="fsdp", remat="dots")),
+            ("2d_dots", dict(profile="2d", remat="dots")),
+            ("fsdp_mb4_dots", dict(profile="fsdp", remat="dots",
+                                   microbatches=4)),
+        ],
+    },
+    # the most collective-bound cell in the whole table (EP dispatch)
+    "qwen3_train": {
+        "arch": "qwen3-moe-30b-a3b",
+        "shape": "train_4k",
+        "variants": [
+            ("baseline_2d", dict(profile="2d", remat="full")),
+            ("fsdp_profile", dict(profile="fsdp", remat="full")),
+        ],
+    },
+}
+
+
+def run_cell(cell: str) -> list:
+    spec = PLAYBOOK[cell]
+    results = []
+    for name, kw in spec["variants"]:
+        try:
+            rec = dr.lower_cell(spec["arch"], spec["shape"], multi_pod=False,
+                                impl="blocked_jax", correct=True, **kw)
+            rec["iteration"] = name
+            rec["cell"] = cell
+        except Exception as e:  # noqa: BLE001
+            rec = {"cell": cell, "iteration": name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+            print(f"  [{cell}/{name}] ERROR {rec['error']}", flush=True)
+        results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(PLAYBOOK))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(PLAYBOOK)
+
+    existing = []
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            existing = json.load(f)
+    done = {(r.get("cell"), r.get("iteration")) for r in existing
+            if r.get("status") == "ok"}
+    for cell in cells:
+        spec = PLAYBOOK[cell]
+        for name, kw in spec["variants"]:
+            if (cell, name) in done:
+                print(f"  [{cell}/{name}] cached", flush=True)
+                continue
+            try:
+                rec = dr.lower_cell(spec["arch"], spec["shape"],
+                                    multi_pod=False, impl="blocked_jax",
+                                    correct=True, **kw)
+                rec["iteration"] = name
+                rec["cell"] = cell
+            except Exception as e:  # noqa: BLE001
+                rec = {"cell": cell, "iteration": name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-1500:]}
+                print(f"  [{cell}/{name}] ERROR {rec['error']}", flush=True)
+            existing = [r for r in existing
+                        if not (r.get("cell") == cell
+                                and r.get("iteration") == name)]
+            existing.append(rec)
+            with open(OUT, "w") as f:
+                json.dump(existing, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and everything else must see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    pure data parallelism (cross-pod DCN carries only gradient all-reduce /
+    no per-layer collectives)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

@@ -1,0 +1,255 @@
+"""Jitted step builders + per-(arch x shape) input specs for the dry-run and
+the real train/serve entry points.
+
+Everything here is mesh-aware: parameters get their FSDP+TP NamedShardings
+from the logical rules, activations shard batch over (pod, data), and decode
+KV caches shard their sequence axis over ``model`` (the 32k qwen2-72b cache
+is 1.4 TB — it MUST shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models.transformer import TransformerLM
+from repro.nn import specs_of
+from repro.parallel import sharding as shlib
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def dec_len_for(cfg: LMConfig, seq_len: int) -> int:
+    """Enc-dec (whisper): decoder length ~ seq/8 (frame-to-token ratio)."""
+    return max(64, seq_len // 8)
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec, mesh: Mesh) -> tuple[dict, dict]:
+    """Returns (abstract_batch, shardings) for the given shape kind."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    emb = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+    bsh = lambda ndim, trailing=(): shlib.batch_sharding_for(mesh, B, ndim, trailing)
+
+    batch: dict = {}
+    shard: dict = {}
+    if shape.kind == "train":
+        if cfg.embed_inputs:  # vlm stub frontend
+            batch["embeds"] = emb(B, S)
+            shard["embeds"] = bsh(3)
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            shard["mrope_positions"] = NamedSharding(
+                mesh, P(None, *bsh(2).spec)
+            )
+        elif cfg.is_encdec:  # audio stub frontend
+            batch["enc_embeds"] = emb(B, S)
+            shard["enc_embeds"] = bsh(3)
+            dl = dec_len_for(cfg, S)
+            batch["tokens"] = tok(B, dl)
+            shard["tokens"] = bsh(2)
+        else:
+            batch["tokens"] = tok(B, S)
+            shard["tokens"] = bsh(2)
+        lbl_len = dec_len_for(cfg, S) if cfg.is_encdec else S
+        batch["labels"] = tok(B, lbl_len)
+        shard["labels"] = bsh(2)
+        return batch, shard
+
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            batch["embeds"] = emb(B, S)
+            shard["embeds"] = bsh(3)
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            shard["mrope_positions"] = NamedSharding(mesh, P(None, *bsh(2).spec))
+        elif cfg.is_encdec:
+            batch["enc_embeds"] = emb(B, S)
+            shard["enc_embeds"] = bsh(3)
+            batch["tokens"] = tok(B, dec_len_for(cfg, S))
+            shard["tokens"] = bsh(2)
+        else:
+            batch["tokens"] = tok(B, S)
+            shard["tokens"] = bsh(2)
+        return batch, shard
+
+    # decode: one new token against a cache of length S
+    if cfg.embed_inputs:
+        batch["token"] = emb(B, 1)
+        shard["token"] = bsh(3)
+    else:
+        batch["token"] = tok(B, 1)
+        shard["token"] = bsh(2)
+    if cfg.is_encdec:
+        enc_s = dec_len_for(cfg, S)  # decoder cache is the long dim; encoder
+        batch["context"] = emb(B, S)  # output attended via cross-attention
+        shard["context"] = bsh(3)
+    return batch, shard
+
+
+# ---------------------------------------------------------------------------
+# cache specs + shardings
+# ---------------------------------------------------------------------------
+
+
+def abstract_cache(model: TransformerLM, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def cache_shardings(caches_abs, mesh: Mesh, global_batch: int,
+                    layout: str = "decode"):
+    """Path-aware shardings.
+
+    ``decode`` layout: KV caches shard (batch->data, seq->model) — the
+    flash-decoding layout: each model shard owns a contiguous KV stripe and
+    attention scores stay local.
+    ``prefill`` layout: KV shards (batch->data, head_dim->model) — the layout
+    the TP projection naturally produces, so writing the cache out needs no
+    reshard (avoids an SPMD involuntary-rematerialization).
+    SSM/RNN states shard (batch->data, width->model) in both."""
+    ba = shlib.batch_axes(mesh)
+    bax = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    def batch_ok(dim):
+        n = 1
+        for a in (ba if isinstance(ba, tuple) else (ba,)):
+            n *= mesh.shape[a]
+        return dim % n == 0
+
+    def model_ok(dim):
+        return "model" in mesh.axis_names and dim % mesh.shape["model"] == 0
+
+    def leaf_spec(path, leaf):
+        names = [str(p) for p in path]
+        joined = "/".join(names)
+        shape = leaf.shape
+        b = bax if (len(shape) > 1 and batch_ok(shape[1])) else None
+        if "attn" in joined:  # (L, B, S, KVH, D)
+            if layout == "prefill":
+                d = "model" if model_ok(shape[4]) else None
+                return P(None, b, None, None, d)
+            seq = "model" if model_ok(shape[2]) else None
+            return P(None, b, seq, None, None)
+        if "ssm" in joined:
+            if len(shape) == 5:  # (L, B, H, P, N)
+                h = "model" if model_ok(shape[2]) else None
+                return P(None, b, h, None, None)
+            return P(None, b, None, "model" if model_ok(shape[-1]) else None)
+        if "rnn" in joined:
+            if len(shape) == 3:  # (L, B, D)
+                return P(None, b, "model" if model_ok(shape[-1]) else None)
+            return P(None, b, None, "model" if model_ok(shape[-1]) else None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, leaf_spec(path, leaf)), caches_abs
+    )
+
+
+def param_shardings(model, mesh: Mesh):
+    specs = specs_of(model.defs())
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return shlib.logical_to_sharding(specs, shapes, mesh)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: TransformerLM, cfg: LMConfig, mesh: Mesh, *,
+                    remat: str = "dots", impl: str = "blocked_jax",
+                    opt_cfg: AdamWConfig = AdamWConfig(), unroll: bool = False,
+                    microbatches: int = 1):
+    """Returns (train_step_fn, in_shardings, out_shardings) ready to jit.
+
+    ``microbatches > 1`` = gradient accumulation: the global batch is split
+    on its leading dim and grads are accumulated in fp32 over a sequential
+    ``lax.scan`` — activation memory divides by the factor, which is what
+    lets the 72B/MoE train cells fit 16 GiB HBM."""
+    p_sh = param_shardings(model, mesh)
+    opt_sh = {
+        "step": NamedSharding(mesh, P()),
+        "m": p_sh,
+        "v": p_sh,
+    }
+
+    def loss_fn(p, b):
+        return model.loss(p, b, impl=impl, remat=remat, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            gb = batch["labels"].shape[0]
+
+            def split_leaf(x):
+                # batch dim is axis 0 except mrope_positions (3, B, S)
+                ax = 0 if x.shape[0] == gb else 1
+                mbs = x.shape[ax] // microbatches
+                new_shape = x.shape[:ax] + (microbatches, mbs) + x.shape[ax + 1:]
+                y = x.reshape(new_shape)
+                if ax != 0:
+                    y = jnp.moveaxis(y, ax, 0)
+                spec = [None] * y.ndim
+                spec[1 + (0 if ax == 0 else ax)] = "batch"
+                return shlib.constrain(y, tuple(spec))
+
+            split = jax.tree.map(split_leaf, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+
+            def mb_step(acc, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(mb_step, zeros, split)
+            loss = jnp.mean(losses)
+        params2, opt2, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    rep = NamedSharding(mesh, P())
+    metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+    return train_step, (p_sh, opt_sh), (p_sh, opt_sh, metrics_sh)
+
+
+def make_prefill_step(model: TransformerLM, cfg: LMConfig, mesh: Mesh, *,
+                      impl: str = "blocked_jax", unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, caches, ctx = model.prefill(
+            params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+            impl=impl,
+            unroll=unroll,
+        )
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(model: TransformerLM, cfg: LMConfig, mesh: Mesh, *,
+                    impl: str = "blocked_jax", unroll: bool = False):
+    def serve_step(params, token, caches, cur_len, context=None):
+        logits, new_caches = model.decode_step(
+            params, token, caches, cur_len, context=context, impl=impl,
+            unroll=unroll,
+        )
+        return logits, new_caches
+
+    return serve_step

@@ -1,0 +1,1 @@
+"""Model zoo: shared layers, LM backbone, and the paper's TTI/TTV suite."""

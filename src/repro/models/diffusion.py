@@ -1,0 +1,201 @@
+"""Diffusion TTI pipelines (paper Fig. 2, top two rows).
+
+Two systems variants, exactly as the paper taxonomizes them:
+  * latent (Stable-Diffusion-like): text encoder -> UNet denoising loop in
+    latent space -> VAE decoder.
+  * pixel  (Imagen-like): text encoder -> base 64x64 UNet loop -> cascade of
+    super-resolution UNets (which trade attention for convolution at high
+    resolution — the paper's C1/C6 observation about SR networks).
+
+The denoising loop is a ``lax.fori_loop`` over DDIM steps.  For
+characterization the per-step operator events are recorded once and scaled
+by the step count (every step executes the identical graph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.models.text_encoder import TextEncoder, TextEncoderConfig
+from repro.models.unet import UNet2D, UNetConfig
+from repro.models.vae import ConvDecoder, DecoderConfig
+from repro.nn import Module
+
+
+# ---------------------------------------------------------------------------
+# Noise schedule (DDIM over a linear-beta DDPM schedule)
+# ---------------------------------------------------------------------------
+
+
+def ddpm_alphas(n_train_steps: int = 1000):
+    betas = jnp.linspace(1e-4, 0.02, n_train_steps, dtype=jnp.float32)
+    return jnp.cumprod(1.0 - betas)
+
+
+def ddim_step(x, eps, a_t, a_prev):
+    """Deterministic DDIM update (eta=0)."""
+    x0 = (x - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SRStage:
+    """Super-resolution stage: upsample cond image, denoise at high res."""
+
+    out_size: int
+    unet: UNetConfig
+    steps: int = 20
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    name: str
+    kind: str  # "latent" | "pixel"
+    image_size: int
+    latent_down: int  # 8 for SD; 1 for pixel models
+    unet: UNetConfig
+    text: TextEncoderConfig
+    vae: DecoderConfig | None = None
+    sr_stages: tuple = ()
+    denoise_steps: int = 50
+    text_len: int = 77
+    family: str = "diffusion"
+    source: str = ""
+
+    @property
+    def latent_size(self):
+        return self.image_size // self.latent_down
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+class DiffusionPipeline(Module):
+    def __init__(self, cfg: DiffusionConfig):
+        self.cfg = cfg
+        self.text_encoder = TextEncoder(cfg.text)
+        self.unet = UNet2D(cfg.unet)
+        self.vae = ConvDecoder(cfg.vae) if cfg.vae is not None else None
+        self.sr_unets = [UNet2D(s.unet) for s in cfg.sr_stages]
+
+    def defs(self):
+        d = {"text": self.text_encoder.defs(), "unet": self.unet.defs()}
+        if self.vae is not None:
+            d["vae"] = self.vae.defs()
+        for i, sr in enumerate(self.sr_unets):
+            d[f"sr{i}"] = sr.defs()
+        return d
+
+    # -- training ----------------------------------------------------------
+
+    def train_loss(self, params, batch, key, *, impl="auto"):
+        """Denoising loss on the base UNet.
+
+        batch: {"latents": (B,h,w,C), "text": (B,L)} — for latent models the
+        latents come from the (frozen) VAE encoder in the data pipeline; for
+        pixel models they are 64x64 RGB images.
+        """
+        cfg = self.cfg
+        z0 = batch["latents"].astype(jnp.float32)
+        B = z0.shape[0]
+        k_t, k_eps = jax.random.split(key)
+        alphas = ddpm_alphas()
+        t = jax.random.randint(k_t, (B,), 0, alphas.shape[0])
+        a_t = alphas[t][:, None, None, None]
+        eps = jax.random.normal(k_eps, z0.shape, jnp.float32)
+        x_t = jnp.sqrt(a_t) * z0 + jnp.sqrt(1.0 - a_t) * eps
+
+        ctx = self.text_encoder(params["text"], batch["text"], impl=impl)
+        pred = self.unet(params["unet"], x_t.astype(cfg.unet.dtype),
+                         t.astype(jnp.float32), ctx, impl=impl)
+        return jnp.mean((pred.astype(jnp.float32) - eps) ** 2)
+
+    # -- inference ----------------------------------------------------------
+
+    def encode_text(self, params, tokens, *, impl="auto"):
+        with tracer.scope("text_encoder"):
+            return self.text_encoder(params["text"], tokens, impl=impl)
+
+    def denoise_loop(self, params_unet, unet: UNet2D, z, ctx, steps, *,
+                     cond=None, impl="auto"):
+        """DDIM loop.  ``cond`` (SR stages: the upsampled low-res image) is
+        concatenated on channels at every step but not denoised.  Under an
+        active trace the single-step events are scaled by ``steps`` instead
+        of tracing the loop (every step executes the identical graph)."""
+        alphas = ddpm_alphas()
+        ts = jnp.linspace(999, 0, steps).astype(jnp.int32)
+
+        def unet_eps(z, t_scalar):
+            inp = z if cond is None else jnp.concatenate([z, cond], axis=-1)
+            return unet(params_unet, inp,
+                        jnp.full((z.shape[0],), t_scalar, jnp.float32), ctx,
+                        impl=impl)
+
+        if tracer.active():
+            # record one step's events, scale by step count
+            from repro.core.tracer import _traces
+
+            tr = _traces()[-1]
+            t0 = len(tr.events)
+            eps = unet_eps(z, 999.0)
+            for i in range(t0, len(tr.events)):
+                tr.events[i] = tr.events[i].scaled(steps)
+            return ddim_step(z, eps, alphas[999], 1.0)
+
+        def body(i, z):
+            t = ts[i]
+            a_t = alphas[t]
+            a_prev = jnp.where(
+                i + 1 < steps, alphas[ts[jnp.minimum(i + 1, steps - 1)]], 1.0
+            )
+            eps = unet_eps(z, t)
+            return ddim_step(z, eps, a_t, a_prev)
+
+        return jax.lax.fori_loop(0, steps, body, z)
+
+    def sample(self, params, tokens, key, *, impl="auto", return_latents=False):
+        """Full TTI inference: text -> denoise -> decode (paper Fig. 2)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        ctx = self.encode_text(params, tokens, impl=impl)
+        hw = cfg.latent_size
+        z = jax.random.normal(key, (B, hw, hw, cfg.unet.in_channels), cfg.unet.dtype)
+        with tracer.scope("unet"):
+            z = self.denoise_loop(params["unet"], self.unet, z, ctx,
+                                  cfg.denoise_steps, impl=impl)
+        if cfg.kind == "latent":
+            if return_latents or self.vae is None:
+                return z
+            with tracer.scope("vae"):
+                return self.vae(params["vae"], z)
+        # pixel cascade: base image then SR stages conditioned on upsampled lowres
+        img = z
+        for i, stage in enumerate(cfg.sr_stages):
+            B_, H, W, C = img.shape
+            up = jax.image.resize(
+                img, (B_, stage.out_size, stage.out_size, C), "bilinear"
+            )
+            noise = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (B_, stage.out_size, stage.out_size, 3),
+                img.dtype,
+            )
+            with tracer.scope(f"sr{i}"):
+                img = self.denoise_loop(
+                    params[f"sr{i}"], self.sr_unets[i], noise, ctx, stage.steps,
+                    cond=up, impl=impl,
+                )
+        return img

@@ -1,0 +1,23 @@
+from repro.models.layers.basic import Dense, Embedding
+from repro.models.layers.norms import LayerNorm, RMSNorm, GroupNorm
+from repro.models.layers.mlp import MLP
+from repro.models.layers.attention import Attention, AttentionCache
+from repro.models.layers.moe import MoE
+from repro.models.layers.ssm import Mamba2Mixer
+from repro.models.layers.rglru import RGLRUBlock
+from repro.models.layers import rope
+
+__all__ = [
+    "Dense",
+    "Embedding",
+    "LayerNorm",
+    "RMSNorm",
+    "GroupNorm",
+    "MLP",
+    "Attention",
+    "AttentionCache",
+    "MoE",
+    "Mamba2Mixer",
+    "RGLRUBlock",
+    "rope",
+]

@@ -1,0 +1,289 @@
+"""Multi-head (GQA) attention layer — the paper's central operator.
+
+Supports every attention pattern in the suite:
+  * self-attention, causal or bidirectional (LLM / diffusion spatial attn)
+  * cross-attention to an encoded context (UNet text conditioning, enc-dec)
+  * causal local-window attention (RecurrentGemma)
+  * decode with a KV cache (Table III "Decode" regime)
+
+The core similarity/softmax/PV computation dispatches through
+``repro.kernels.flash_attention.ops.attention`` with a selectable ``impl``;
+``naive`` is the paper's Baseline Attention, everything else is the Flash
+path.  Tracer events model the HBM-traffic difference between the two, which
+is what moves the Fig. 6 operator breakdown.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models.layers import rope as rope_lib
+from repro.models.layers.basic import Dense, nbytes
+from repro.nn import Module
+
+
+class AttentionCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KVH, D)
+    v: jax.Array
+    # current length is tracked by the caller (uniform across batch)
+
+
+def _attention_event(
+    name, impl, B, Sq, Skv, H, D, dtype, causal, window, is_temporal=False
+):
+    if not tracer.active():
+        return
+    elem = tracer.dtype_bytes(dtype)
+    qkv_bytes = (B * Sq * H * D + 2 * B * Skv * H * D) * elem
+    out_bytes = B * Sq * H * D * elem
+    frac = 0.5 if causal else 1.0
+    if window is not None and Skv > window:
+        frac = min(frac, window / Skv)
+    flops = 4.0 * B * H * Sq * Skv * D * frac
+    if impl == "naive":
+        # Baseline attention: the (Sq, Skv) similarity matrix makes two fp32
+        # HBM round trips (scores write+read for softmax, probs write+read
+        # for PV) — the traffic Flash Attention eliminates (paper §IV-A).
+        inter = 4.0 * B * H * Sq * Skv * 4 * frac
+        traffic = qkv_bytes + out_bytes + inter
+    else:
+        # Flash: K/V are re-streamed once per Q block resident in VMEM.
+        block_q = 512
+        kv_repasses = max(1, Sq // block_q) * frac
+        traffic = qkv_bytes + out_bytes + (2 * B * Skv * H * D * elem) * (kv_repasses - 1)
+    tracer.record(
+        "attention",
+        name,
+        flops=flops,
+        bytes_hbm=traffic,
+        seq_len=int(Skv),
+        impl=impl,
+        temporal=is_temporal,
+        q_len=int(Sq),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention(Module):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    out_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_base: float = 10000.0
+    rope_pct: float = 1.0  # partial rotary (StableLM)
+    mrope_sections: tuple | None = None  # Qwen2-VL M-RoPE
+    causal: bool = True
+    window: int | None = None
+    cross: bool = False  # K/V come from a context tensor
+    impl: str = "auto"
+    dtype: Any = jnp.float32
+    name: str = "attn"
+
+    @property
+    def q_dim(self):
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+    def _proj(self, name, out_dim, bias, axes):
+        return Dense(self.d_model, out_dim, bias, axes=axes, dtype=self.dtype, name=name)
+
+    # GQA-TP: when n_kv_heads is below the TP width, K/V projections are
+    # REPLICATED across the model axis (the weights are ~d*kv_dim, a few MB)
+    # so every head shard computes K/V locally — zero activation collectives,
+    # vs ~1 GiB/layer of K/V all-to-alls at 32k prefill if sharded.
+    TP_WIDTH_HINT = 16
+
+    @property
+    def _kv_axis(self):
+        return "kv_heads" if self.n_kv_heads >= self.TP_WIDTH_HINT else "kv_heads_small"
+
+    def _wq(self):
+        return self._proj("wq", self.q_dim, self.qkv_bias, ("embed", "heads"))
+
+    def _wk(self):
+        return self._proj("wk", self.kv_dim, self.qkv_bias, ("embed", self._kv_axis))
+
+    def _wv(self):
+        return self._proj("wv", self.kv_dim, self.qkv_bias, ("embed", self._kv_axis))
+
+    def _wo(self):
+        return Dense(self.q_dim, self.d_model, self.out_bias,
+                     axes=("heads", "embed"), dtype=self.dtype, name="wo")
+
+    def defs(self):
+        d = {
+            "wq": self._wq().defs(),
+            "wk": self._wk().defs(),
+            "wv": self._wv().defs(),
+            "wo": self._wo().defs(),
+        }
+        if self.qk_norm:
+            from repro.models.layers.norms import RMSNorm
+
+            d["q_norm"] = RMSNorm(self.head_dim, dtype=self.dtype).defs()
+            d["k_norm"] = RMSNorm(self.head_dim, dtype=self.dtype).defs()
+        return d
+
+    # -- helpers -----------------------------------------------------------
+
+    def _split_heads(self, x, n):
+        B, S, _ = x.shape
+        return x.reshape(B, S, n, self.head_dim)
+
+    def _apply_rope(self, x, positions):
+        if positions is None or not self.rope:
+            return x
+        if self.mrope_sections is not None:
+            if positions.ndim == 2:
+                positions = rope_lib.text_mrope_positions(positions)
+            return rope_lib.apply_mrope(
+                x, positions, self.mrope_sections, base=self.rope_base
+            )
+        return rope_lib.apply_rope(
+            x, positions, base=self.rope_base, rotary_pct=self.rope_pct
+        )
+
+    def _qk_norm(self, params, q, k):
+        if not self.qk_norm:
+            return q, k
+        from repro.models.layers.norms import RMSNorm
+
+        norm = RMSNorm(self.head_dim, dtype=self.dtype)
+        return norm(params["q_norm"], q), norm(params["k_norm"], k)
+
+    # -- forward (train / prefill) -----------------------------------------
+
+    def __call__(
+        self,
+        params,
+        x: jax.Array,  # (B, S, d_model)
+        *,
+        positions: jax.Array | None = None,
+        context: jax.Array | None = None,  # (B, S_ctx, d_model) for cross-attn
+        impl: str | None = None,
+        return_kv: bool = False,
+    ):
+        impl = impl or self.impl
+        B, S, _ = x.shape
+        kv_src = context if self.cross else x
+        q = self._split_heads(self._wq()(params["wq"], x), self.n_heads)
+        k = self._split_heads(self._wk()(params["wk"], kv_src), self.n_kv_heads)
+        v = self._split_heads(self._wv()(params["wv"], kv_src), self.n_kv_heads)
+        # pin batch x head sharding on the projections (see MLP note: stops
+        # the partitioner from partial-summing the FSDP embed contraction
+        # over a batch-replicated tensor)
+        from repro.parallel.sharding import constrain
+
+        q = constrain(q, ("batch", None, "model", None))
+        kv_spec = ("batch", None,
+                   "model" if self.n_kv_heads >= self.TP_WIDTH_HINT else None,
+                   None)
+        k = constrain(k, kv_spec)
+        v = constrain(v, kv_spec)
+        q, k = self._qk_norm(params, q, k)
+        if not self.cross:
+            q = self._apply_rope(q, positions)
+            k = self._apply_rope(k, positions)
+
+        causal = self.causal and not self.cross
+        out = attn_ops.attention(
+            q, k, v, causal=causal, window=self.window, impl=impl
+        )
+        _attention_event(
+            self.name, attn_ops._resolve(impl), B, S, k.shape[1],
+            self.n_heads, self.head_dim, x.dtype, causal, self.window,
+        )
+        y = self._wo()(params["wo"], out.reshape(B, S, self.q_dim))
+        if return_kv:
+            return y, AttentionCache(k=k, v=v)
+        return y
+
+    # -- decode (one token against a cache) ---------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> AttentionCache:
+        dtype = dtype or self.dtype
+        shape = (batch, max_len, self.n_kv_heads, self.head_dim)
+        return AttentionCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+    def decode(
+        self,
+        params,
+        x: jax.Array,  # (B, 1, d_model)
+        cache: AttentionCache,
+        cur_len: jax.Array,  # scalar int32: tokens already in cache
+        *,
+        cross_cache: AttentionCache | None = None,
+        cross_len: jax.Array | None = None,
+    ):
+        B = x.shape[0]
+        q = self._split_heads(self._wq()(params["wq"], x), self.n_heads)
+
+        if self.cross:
+            # K/V are precomputed from the encoder context (cross_cache).
+            assert cross_cache is not None
+            if self.qk_norm:
+                from repro.models.layers.norms import RMSNorm
+
+                q = RMSNorm(self.head_dim, dtype=self.dtype)(params["q_norm"], q)
+            kv_len = (
+                jnp.full((B,), cross_cache.k.shape[1], jnp.int32)
+                if cross_len is None
+                else jnp.broadcast_to(cross_len, (B,))
+            )
+            out = attn_ops.decode_attention(
+                q, cross_cache.k, cross_cache.v, kv_len=kv_len
+            )
+            _attention_event(
+                self.name, "decode", B, 1, cross_cache.k.shape[1],
+                self.n_heads, self.head_dim, x.dtype, False, None,
+            )
+            y = self._wo()(params["wo"], out.reshape(B, 1, self.q_dim))
+            return y, cache
+
+        k_new = self._split_heads(self._wk()(params["wk"], x), self.n_kv_heads)
+        v_new = self._split_heads(self._wv()(params["wv"], x), self.n_kv_heads)
+        q, k_new = self._qk_norm(params, q, k_new)
+        pos = jnp.broadcast_to(cur_len, (B, 1)).astype(jnp.int32)
+        q = self._apply_rope(q, pos)
+        k_new = self._apply_rope(k_new, pos)
+
+        cap = cache.k.shape[1]
+        ring = self.window is not None and cap <= self.window
+        if ring:
+            # Ring-buffer window cache: softmax is permutation-invariant over
+            # KV entries (RoPE already baked absolute positions into k), so
+            # storage order inside the window is irrelevant.  This keeps the
+            # local-attention cache O(window) — the property that makes the
+            # hybrid archs sub-quadratic at 500k context.
+            write_idx = jnp.mod(cur_len, cap)
+            kv_len = jnp.broadcast_to(jnp.minimum(cur_len + 1, cap), (B,))
+            window_arg = None  # buffer only ever holds in-window entries
+        else:
+            write_idx = cur_len
+            kv_len = jnp.broadcast_to(cur_len + 1, (B,))
+            window_arg = self.window
+        k_cache = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, write_idx, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, write_idx, 0, 0))
+        out = attn_ops.decode_attention(
+            q, k_cache, v_cache, kv_len=kv_len, window=window_arg
+        )
+        _attention_event(
+            self.name, "decode", B, 1, cache.k.shape[1],
+            self.n_heads, self.head_dim, x.dtype, True, self.window,
+        )
+        y = self._wo()(params["wo"], out.reshape(B, 1, self.q_dim))
+        return y, AttentionCache(k=k_cache, v=v_cache)

@@ -1,0 +1,135 @@
+"""Dense / Embedding primitives with tracer instrumentation."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.nn import Module, ParamDef, scaled_init, normal_init, zeros_init
+
+
+def nbytes(*shapes_dtypes) -> int:
+    total = 0
+    for shape, dtype in shapes_dtypes:
+        total += int(np.prod(shape)) * tracer.dtype_bytes(dtype)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense(Module):
+    """y = x @ W (+ b).  ``axes`` are the logical sharding names of W."""
+
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    axes: tuple = ("embed", "mlp")
+    dtype: Any = jnp.float32
+    name: str = "dense"
+
+    def defs(self):
+        d = {
+            "kernel": ParamDef(
+                (self.in_dim, self.out_dim), self.axes, scaled_init((0,)), self.dtype
+            )
+        }
+        if self.use_bias:
+            d["bias"] = ParamDef((self.out_dim,), (self.axes[1],), zeros_init, self.dtype)
+        return d
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        w = params["kernel"].astype(x.dtype)
+        # Explicit ZeRO-3 semantics: FSDP-sharded weight axes (data/pod) are
+        # pinned replicated AT USE, so the partitioner must all-gather the
+        # weight (cheap, param-sized) instead of partial-summing the
+        # contraction over a batch-replicated activation (seq x batch-sized —
+        # the dominant collective in the glm4 prefill baseline).  TP axes
+        # (model) stay sharded.
+        from repro.parallel.sharding import constrain, current_rules
+
+        rules = current_rules()
+        use_spec = []
+        for ax in self.axes:
+            r = rules.get(ax)
+            rt = r if isinstance(r, tuple) else (r,)
+            use_spec.append(None if any(a in ("data", "pod") for a in rt) else r)
+        w = constrain(w, tuple(use_spec))
+        y = jnp.matmul(x, w)
+        if self.use_bias:
+            y = y + params["bias"].astype(x.dtype)
+        if tracer.active():
+            batch = int(np.prod(x.shape[:-1]))
+            tracer.record(
+                "linear",
+                self.name,
+                flops=2.0 * batch * self.in_dim * self.out_dim,
+                bytes_hbm=nbytes(
+                    (x.shape, x.dtype),
+                    (y.shape, y.dtype),
+                    ((self.in_dim, self.out_dim), x.dtype),
+                ),
+            )
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding(Module):
+    """Token embedding with optional tied logits head (``attend``)."""
+
+    vocab: int
+    dim: int
+    dtype: Any = jnp.float32
+    name: str = "embed"
+
+    def defs(self):
+        return {
+            "table": ParamDef(
+                (self.vocab, self.dim), ("vocab", "embed"), normal_init(0.02), self.dtype
+            )
+        }
+
+    def __call__(self, params, ids: jax.Array) -> jax.Array:
+        table = params["table"]
+        out = jnp.take(table, ids, axis=0)
+        if tracer.active():
+            batch = int(np.prod(ids.shape))
+            tracer.record(
+                "embed",
+                self.name,
+                flops=0.0,
+                bytes_hbm=nbytes((out.shape, out.dtype)) + batch * 4,
+            )
+        return out
+
+    def attend(self, params, x: jax.Array) -> jax.Array:
+        """Logits via the transposed embedding table (tied head)."""
+        table = params["table"].astype(x.dtype)
+        y = jnp.matmul(x, table.T)
+        if tracer.active():
+            batch = int(np.prod(x.shape[:-1]))
+            tracer.record(
+                "linear",
+                f"{self.name}_logits",
+                flops=2.0 * batch * self.dim * self.vocab,
+                bytes_hbm=nbytes(
+                    (x.shape, x.dtype), (y.shape, y.dtype),
+                    ((self.vocab, self.dim), x.dtype),
+                ),
+            )
+        return y
+
+
+def sinusoidal_embedding(t: jax.Array, dim: int, max_period: float = 10000.0) -> jax.Array:
+    """Timestep / position sinusoidal features: t (...,) -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[..., None] * freqs
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb

@@ -1,0 +1,158 @@
+"""Convolution layers: 2D (UNet), causal depthwise 1D (SSM), temporal (TTV).
+
+Convolution is the paper's headline post-Flash-Attention bottleneck (C1: up
+to 44% of diffusion execution time), so every conv records a tracer event
+with exact FLOPs and HBM traffic.  Layout is NHWC (TPU-native; convs lower to
+MXU matmuls over the C/KhKwC contraction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.models.layers.basic import nbytes
+from repro.nn import Module, ParamDef, scaled_init, zeros_init
+
+_DIMSPEC = ("NHWC", "HWIO", "NHWC")
+
+
+def _record_conv(name, x, y, w_shape, groups=1):
+    if not tracer.active():
+        return
+    B = x.shape[0]
+    out_spatial = int(np.prod(y.shape[1:-1]))
+    kh_kw_cin = int(np.prod(w_shape[:-1]))
+    cout = w_shape[-1]
+    flops = 2.0 * B * out_spatial * cout * kh_kw_cin / max(groups, 1)
+    tracer.record(
+        "conv",
+        name,
+        flops=flops,
+        bytes_hbm=nbytes((x.shape, x.dtype), (y.shape, y.dtype), (w_shape, x.dtype)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2D(Module):
+    in_ch: int
+    out_ch: int
+    kernel: int = 3
+    stride: int = 1
+    use_bias: bool = True
+    dtype: Any = jnp.float32
+    name: str = "conv"
+
+    def defs(self):
+        d = {
+            "kernel": ParamDef(
+                (self.kernel, self.kernel, self.in_ch, self.out_ch),
+                (None, None, "conv_in", "conv_out"),
+                scaled_init((0, 1, 2)),
+                self.dtype,
+            )
+        }
+        if self.use_bias:
+            d["bias"] = ParamDef((self.out_ch,), ("conv_out",), zeros_init, self.dtype)
+        return d
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        w = params["kernel"].astype(x.dtype)
+        pad = self.kernel // 2
+        y = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=(self.stride, self.stride),
+            padding=[(pad, pad), (pad, pad)],
+            dimension_numbers=_DIMSPEC,
+        )
+        if self.use_bias:
+            y = y + params["bias"].astype(x.dtype)
+        _record_conv(self.name, x, y, w.shape)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalDepthwiseConv1D(Module):
+    """Short causal depthwise conv over the sequence axis (Mamba/Griffin)."""
+
+    channels: int
+    width: int = 4
+    dtype: Any = jnp.float32
+    name: str = "conv1d"
+
+    def defs(self):
+        return {
+            "kernel": ParamDef(
+                (self.width, self.channels), (None, "mlp"),
+                scaled_init((0,)), self.dtype,
+            ),
+            "bias": ParamDef((self.channels,), ("mlp",), zeros_init, self.dtype),
+        }
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        """x: (B, S, C) -> causal depthwise conv along S."""
+        w = params["kernel"].astype(x.dtype)  # (W, C)
+        B, S, C = x.shape
+        xp = jnp.pad(x, [(0, 0), (self.width - 1, 0), (0, 0)])
+        y = jax.lax.conv_general_dilated(
+            xp[:, :, None, :],  # (B, S+W-1, 1, C)
+            w[:, None, None, :],  # (W, 1, 1, C) HWIO with feature groups
+            window_strides=(1, 1),
+            padding=[(0, 0), (0, 0)],
+            dimension_numbers=_DIMSPEC,
+            feature_group_count=C,
+        )[:, :, 0, :]
+        y = y + params["bias"].astype(x.dtype)
+        _record_conv(self.name, x, y, (self.width, 1, 1, C), groups=C)
+        return y
+
+    def step(self, params, x_new: jax.Array, conv_state: jax.Array):
+        """Single decode step. x_new (B, C); conv_state (B, W-1, C)."""
+        w = params["kernel"].astype(x_new.dtype)
+        window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", window, w) + params["bias"].astype(x_new.dtype)
+        return y, window[:, 1:, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalConv1D(Module):
+    """Conv over the frame axis of (B, F, H, W, C) video tensors — the
+    'temporal convolution' layers TTV models interleave with temporal
+    attention (paper §II-B / Make-A-Video pseudo-3D convs)."""
+
+    channels: int
+    kernel: int = 3
+    dtype: Any = jnp.float32
+    name: str = "tconv"
+
+    def defs(self):
+        return {
+            "kernel": ParamDef(
+                (self.kernel, self.channels, self.channels),
+                (None, "conv_in", "conv_out"),
+                scaled_init((0, 1)),
+                self.dtype,
+            ),
+            "bias": ParamDef((self.channels,), ("conv_out",), zeros_init, self.dtype),
+        }
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        B, F, H, W, C = x.shape
+        w = params["kernel"].astype(x.dtype)  # (K, C, C)
+        xf = x.transpose(0, 2, 3, 1, 4).reshape(B * H * W, F, C)
+        pad = self.kernel // 2
+        y = jax.lax.conv_general_dilated(
+            xf[:, :, None, :],
+            w[:, None, :, :],  # (K, 1, C, C)
+            window_strides=(1, 1),
+            padding=[(pad, pad), (0, 0)],
+            dimension_numbers=_DIMSPEC,
+        )[:, :, 0, :]
+        y = y + params["bias"].astype(x.dtype)
+        _record_conv(self.name, xf, y, (self.kernel, 1, C, C))
+        return y.reshape(B, H, W, F, C).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,74 @@
+"""Feed-forward blocks: plain MLP and gated (SwiGLU/GeGLU) variants."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tracer
+from repro.models.layers.basic import Dense, nbytes
+from repro.nn import Module
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP(Module):
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+    gated: bool = True  # SwiGLU / GeGLU
+    use_bias: bool = False
+    dtype: Any = jnp.float32
+    name: str = "mlp"
+
+    def _wi(self):
+        return Dense(self.d_model, self.d_ff, self.use_bias,
+                     axes=("embed", "mlp"), dtype=self.dtype, name="wi")
+
+    def _wg(self):
+        return Dense(self.d_model, self.d_ff, self.use_bias,
+                     axes=("embed", "mlp"), dtype=self.dtype, name="wg")
+
+    def _wo(self):
+        return Dense(self.d_ff, self.d_model, self.use_bias,
+                     axes=("mlp", "embed"), dtype=self.dtype, name="wo")
+
+    def defs(self):
+        d = {"wi": self._wi().defs(), "wo": self._wo().defs()}
+        if self.gated:
+            d["wg"] = self._wg().defs()
+        return d
+
+    def __call__(self, params, x: jax.Array) -> jax.Array:
+        from repro.parallel.sharding import constrain
+
+        act = _ACTS[self.activation]
+        h = self._wi()(params["wi"], x)
+        if x.ndim == 3:
+            # Keep the hidden activation batch-sharded x TP-sharded: without
+            # this pin the partitioner may contract the FSDP-sharded embed
+            # axis as partial sums, all-reducing a batch-REPLICATED hidden
+            # (the dominant collective in the glm4 prefill baseline).
+            h = constrain(h, ("batch", None, "model"))
+        if self.gated:
+            g = self._wg()(params["wg"], x)
+            if x.ndim == 3:
+                g = constrain(g, ("batch", None, "model"))
+            h = act(g) * h
+        else:
+            h = act(h)
+        if tracer.active():
+            tracer.record(
+                "pointwise", f"{self.name}_act",
+                flops=4.0 * h.size, bytes_hbm=nbytes((h.shape, h.dtype)) * 2,
+            )
+        return self._wo()(params["wo"], h)

@@ -1,0 +1,163 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence is diagonal and gated:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/training uses ``jax.lax.associative_scan`` over the time axis (the
+recurrence is a linear first-order scan, so it parallelizes to O(log S)
+depth); decode is a single fused step.  The full RecurrentGemma *recurrent
+block* (conv1d + RG-LRU + gated output) is assembled here as well.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.models.layers.basic import Dense, nbytes
+from repro.models.layers.conv import CausalDepthwiseConv1D
+from repro.nn import Module, ParamDef, scaled_init, zeros_init
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    hidden: jax.Array  # (B, d_rnn) recurrent state
+    conv: jax.Array  # (B, W-1, d_rnn) conv window
+
+
+def _lru_scan(log_a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Associative scan of h_t = a_t h_{t-1} + b_t along axis 1.
+
+    log_a, b: (B, S, D); h0: (B, D).  Fold h0 in as an extra first step.
+    """
+    log_a = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+    b = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, b2 + jnp.exp(la2) * b1
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h[:, 1:]  # drop the injected h0 step
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUBlock(Module):
+    """Full Griffin recurrent block: x -> [linear -> conv1d -> RG-LRU] * gate."""
+
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+    dtype: Any = jnp.float32
+    name: str = "rglru"
+
+    def _proj_x(self):
+        return Dense(self.d_model, self.d_rnn, True,
+                     axes=("embed", "mlp"), dtype=self.dtype, name="proj_x")
+
+    def _proj_gate(self):
+        return Dense(self.d_model, self.d_rnn, True,
+                     axes=("embed", "mlp"), dtype=self.dtype, name="proj_gate")
+
+    def _proj_out(self):
+        return Dense(self.d_rnn, self.d_model, True,
+                     axes=("mlp", "embed"), dtype=self.dtype, name="proj_out")
+
+    def _conv(self):
+        return CausalDepthwiseConv1D(self.d_rnn, self.conv_width, dtype=self.dtype)
+
+    def defs(self):
+        D = self.d_rnn
+        return {
+            "proj_x": self._proj_x().defs(),
+            "proj_gate": self._proj_gate().defs(),
+            "proj_out": self._proj_out().defs(),
+            "conv": self._conv().defs(),
+            "w_a": ParamDef((D, D), ("mlp", None), scaled_init((0,)), self.dtype),
+            "b_a": ParamDef((D,), (None,), zeros_init, jnp.float32),
+            "w_x": ParamDef((D, D), ("mlp", None), scaled_init((0,)), self.dtype),
+            "b_x": ParamDef((D,), (None,), zeros_init, jnp.float32),
+            "lam": ParamDef(
+                (D,), (None,),
+                # init so that a^c = sigma(lam)^c spreads over (0.9, 0.999)
+                lambda k, s, d: jnp.linspace(2.0, 7.0, s[0]).astype(d),
+                jnp.float32,
+            ),
+        }
+
+    def _gates(self, params, x):
+        xf = x.astype(jnp.float32)
+        r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+        i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+        log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (.., D) <= 0
+        return log_a, i
+
+    def __call__(self, params, x: jax.Array, initial_state: RGLRUState | None = None):
+        """x: (B, S, d_model) -> (y, final_state)."""
+        B, S, _ = x.shape
+        gate = jax.nn.gelu(self._proj_gate()(params["proj_gate"], x))
+        u_raw = self._proj_x()(params["proj_x"], x)
+        u = self._conv()(params["conv"], u_raw)
+
+        log_a, i = self._gates(params, u)
+        uf = u.astype(jnp.float32)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+        h0 = (
+            initial_state.hidden.astype(jnp.float32)
+            if initial_state is not None
+            else jnp.zeros((B, self.d_rnn), jnp.float32)
+        )
+        h = _lru_scan(log_a, b, h0)  # (B, S, D)
+
+        y = self._proj_out()(params["proj_out"], (h.astype(x.dtype) * gate))
+        if tracer.active():
+            tracer.record(
+                "scan", self.name,
+                flops=8.0 * B * S * self.d_rnn,
+                bytes_hbm=nbytes(((B, S, self.d_rnn), jnp.float32)) * 3,
+                seq_len=S,
+            )
+        W = self.conv_width
+        tail = (
+            u_raw[:, S - (W - 1) : S]
+            if S >= W - 1
+            else jnp.pad(u_raw, [(0, 0), (W - 1 - S, 0), (0, 0)])
+        )
+        return y, RGLRUState(hidden=h[:, -1], conv=tail.astype(x.dtype))
+
+    def init_state(self, batch: int) -> RGLRUState:
+        return RGLRUState(
+            hidden=jnp.zeros((batch, self.d_rnn), jnp.float32),
+            conv=jnp.zeros((batch, self.conv_width - 1, self.d_rnn), self.dtype),
+        )
+
+    def step(self, params, x: jax.Array, state: RGLRUState):
+        """x: (B, 1, d_model) single decode step."""
+        B = x.shape[0]
+        gate = jax.nn.gelu(self._proj_gate()(params["proj_gate"], x))[:, 0]
+        u_raw = self._proj_x()(params["proj_x"], x)[:, 0]  # (B, D)
+        u, conv_state = self._conv().step(params["conv"], u_raw, state.conv)
+
+        log_a, i = self._gates(params, u)
+        uf = u.astype(jnp.float32)
+        a = jnp.exp(log_a)
+        h = a * state.hidden + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+        y = self._proj_out()(params["proj_out"], (h.astype(x.dtype) * gate)[:, None, :])
+        if tracer.active():
+            tracer.record(
+                "scan", f"{self.name}_step",
+                flops=8.0 * B * self.d_rnn,
+                bytes_hbm=nbytes(((B, self.d_rnn), jnp.float32)) * 2,
+                seq_len=1,
+            )
+        return y, RGLRUState(hidden=h, conv=conv_state)

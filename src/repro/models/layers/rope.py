@@ -1,0 +1,71 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+Functions are parameter-free; they take explicit ``positions`` so the same
+code serves train (0..S-1), prefill, and decode (cache offset) paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (B, S) int32
+    *,
+    base: float = 10000.0,
+    rotary_pct: float = 1.0,
+) -> jax.Array:
+    D = x.shape[-1]
+    rot_d = D if rotary_pct >= 1.0 else max(2, int(D * rotary_pct) // 2 * 2)
+    xr, x_pass = x[..., :rot_d], x[..., rot_d:]
+    inv = rope_freqs(rot_d, base)  # (rot_d/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, rot_d/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, rot_d/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    if rot_d < D:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (3, B, S) int32 — temporal / height / width position ids
+    sections: tuple[int, int, int],  # frequencies per section, sums to D/2
+    *,
+    base: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the D/2 frequency channels are split into
+    (temporal, h, w) sections, each rotated by its own position stream.  For
+    pure-text tokens all three streams are equal and M-RoPE == RoPE."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    inv = rope_freqs(D, base)  # (D/2,)
+    # Build a per-channel position by selecting the section's position stream.
+    section_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=D // 2
+    )  # (D/2,)
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    pos_per_chan = pos[section_id]  # (D/2, B, S)
+    angles = jnp.moveaxis(pos_per_chan, 0, -1) * inv  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """(B, S) -> (3, B, S) with identical streams (text-only M-RoPE)."""
+    return jnp.broadcast_to(positions[None], (3, *positions.shape))

@@ -1,0 +1,268 @@
+"""Mamba-2 mixer (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk the recurrence is expanded into an
+attention-like quadratic form (MXU-friendly); across chunks a sequential
+``lax.scan`` carries the (heads, head_dim, state) recurrent state.  This is
+the TPU-native layout of the Mamba-2 kernel: the chunk-local einsums are
+batched matmuls, and the cross-chunk scan is O(S/chunk) sequential steps.
+
+Decode is a single-step state update (the attention-free arch's whole point:
+O(1) per token, which is why mamba2 runs the ``long_500k`` cell).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.models.layers.basic import Dense, nbytes
+from repro.models.layers.conv import CausalDepthwiseConv1D
+from repro.models.layers.norms import RMSNorm
+from repro.nn import Module, ParamDef, normal_init, zeros_init, ones_init
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array  # (B, H, P, N) recurrent state
+    conv: jax.Array  # (B, W-1, conv_dim) conv window
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Mixer(Module):
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+    n_groups: int = 1
+    dtype: Any = jnp.float32
+    name: str = "mamba2"
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def d_in_proj(self):
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+    def _in_proj(self):
+        return Dense(self.d_model, self.d_in_proj, False,
+                     axes=("embed", "mlp"), dtype=self.dtype, name="in_proj")
+
+    def _out_proj(self):
+        return Dense(self.d_inner, self.d_model, False,
+                     axes=("mlp", "embed"), dtype=self.dtype, name="out_proj")
+
+    def _conv(self):
+        return CausalDepthwiseConv1D(self.conv_dim, self.d_conv, dtype=self.dtype)
+
+    def _norm(self):
+        return RMSNorm(self.d_inner, dtype=self.dtype, name="ssm_norm")
+
+    def defs(self):
+        H = self.n_heads
+        return {
+            "in_proj": self._in_proj().defs(),
+            "conv": self._conv().defs(),
+            "dt_bias": ParamDef((H,), (None,), zeros_init, jnp.float32),
+            "A_log": ParamDef((H,), (None,),
+                              lambda k, s, d: jnp.log(jnp.linspace(1.0, 16.0, s[0])).astype(d),
+                              jnp.float32),
+            "D": ParamDef((H,), (None,), ones_init, jnp.float32),
+            "norm": self._norm().defs(),
+            "out_proj": self._out_proj().defs(),
+        }
+
+    # ------------------------------------------------------------------
+    def _split(self, zxbcdt):
+        di, ng, N, H = self.d_inner, self.n_groups, self.d_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xBC = zxbcdt[..., di : di + self.conv_dim]
+        dt = zxbcdt[..., di + self.conv_dim :]
+        return z, xBC, dt
+
+    def _split_xbc(self, xBC):
+        di, ng, N = self.d_inner, self.n_groups, self.d_state
+        x = xBC[..., :di]
+        Bm = xBC[..., di : di + ng * N]
+        Cm = xBC[..., di + ng * N :]
+        return x, Bm, Cm
+
+    def __call__(self, params, u: jax.Array, initial_state: Mamba2State | None = None):
+        """u: (B, S, d_model). Returns (y, final_state)."""
+        B, S, _ = u.shape
+        H, P, N, L = self.n_heads, self.head_dim, self.d_state, self.chunk
+
+        zxbcdt = self._in_proj()(params["in_proj"], u)
+        z, xBC_raw, dt = self._split(zxbcdt)
+        xBC = jax.nn.silu(self._conv()(params["conv"], xBC_raw))
+        x, Bm, Cm = self._split_xbc(xBC)
+
+        x = x.reshape(B, S, H, P)
+        Bm = Bm.reshape(B, S, self.n_groups, N)
+        Cm = Cm.reshape(B, S, self.n_groups, N)
+        # broadcast groups over heads (n_groups=1 everywhere in our configs)
+        heads_per_group = H // self.n_groups
+        Bm = jnp.repeat(Bm, heads_per_group, axis=2)  # (B, S, H, N)
+        Cm = jnp.repeat(Cm, heads_per_group, axis=2)
+
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, S, H)
+        A = -jnp.exp(params["A_log"])  # (H,) negative
+        dA = dt * A  # (B, S, H)
+
+        # ---- chunking ----
+        pad = (-S) % L
+        if pad:
+            x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+            Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+            Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+            dA = jnp.pad(dA, [(0, 0), (0, pad), (0, 0)])
+            dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        nc = (S + pad) // L
+        xc = x.reshape(B, nc, L, H, P).astype(jnp.float32)
+        Bc = Bm.reshape(B, nc, L, H, N).astype(jnp.float32)
+        Cc = Cm.reshape(B, nc, L, H, N).astype(jnp.float32)
+        dAc = dA.reshape(B, nc, L, H)
+        dtc = dt.reshape(B, nc, L, H)
+
+        # Head-parallel SSD: the intra-chunk (L, L) decay/score tensors are
+        # the memory hot-spot (B*nc*H*L^2 fp32); sharding the head axis over
+        # the TP mesh axis keeps them O(H/tp) per device.
+        from repro.parallel.sharding import constrain
+
+        xc = constrain(xc, ("batch", None, None, "model", None))
+        Bc = constrain(Bc, ("batch", None, None, "model", None))
+        Cc = constrain(Cc, ("batch", None, None, "model", None))
+        dAc = constrain(dAc, ("batch", None, None, "model"))
+        dtc = constrain(dtc, ("batch", None, None, "model"))
+
+        cs = jnp.cumsum(dAc, axis=2)  # inclusive (B, nc, L, H)
+        # intra-chunk decay matrix Lmat[i,j] = exp(cs_i - cs_j) for j <= i.
+        # Mask BEFORE exp: the upper triangle has positive exponents whose
+        # overflow would poison gradients through jnp.where (NaN * 0 = NaN).
+        diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,L,L,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+        Lmat = jnp.exp(jnp.where(mask, diff, -1e30))
+
+        x_dt = xc * dtc[..., None]  # (B,nc,L,H,P)
+        # y_diag[i] = sum_j Lmat[i,j] * (C_i . B_j) * x_dt[j]
+        G = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc)  # (B,nc,L,L,H)
+        y_diag = jnp.einsum("bclsh,bclsh,bcshp->bclhp", G, Lmat, x_dt)
+
+        # chunk-final states: S_c = sum_j exp(cs_last - cs_j) B_j x_dt_j
+        decay_states = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,L,H)
+        states = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_states, Bc, x_dt)
+
+        # cross-chunk recurrence
+        chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+        s0 = (
+            initial_state.ssm.astype(jnp.float32)
+            if initial_state is not None
+            else jnp.zeros((B, H, P, N), jnp.float32)
+        )
+
+        def chunk_step(carry, inp):
+            st_prev = carry
+            decay_c, states_c = inp  # (B,H), (B,H,P,N)
+            st_new = st_prev * decay_c[:, :, None, None] + states_c
+            return st_new, st_prev
+
+        (final_state, prev_states) = jax.lax.scan(
+            chunk_step,
+            s0,
+            (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+        )
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+        # inter-chunk contribution: y_off[l] = exp(cs_l) * C_l . state_prev
+        y_off = jnp.einsum(
+            "bclh,bclhn,bchpn->bclhp", jnp.exp(cs), Cc, prev_states
+        )
+
+        y = (y_diag + y_off).reshape(B, nc * L, H, P)[:, :S]
+        y = y + x.reshape(B, nc * L, H, P)[:, :S] * params["D"][None, None, :, None]
+        y = y.reshape(B, S, self.d_inner).astype(u.dtype)
+
+        # gated RMSNorm (Mamba-2: norm(y * silu(z)))
+        y = y * jax.nn.silu(z)
+        y = self._norm()(params["norm"], y)
+        out = self._out_proj()(params["out_proj"], y)
+
+        if tracer.active():
+            scan_flops = (
+                2.0 * B * nc * L * L * H * (N + P)  # G + y_diag einsums
+                + 2.0 * B * nc * L * H * P * N * 2  # states + y_off
+            )
+            tracer.record(
+                "scan", self.name,
+                flops=scan_flops,
+                bytes_hbm=nbytes((xc.shape, jnp.float32)) * 3
+                + nbytes(((B, nc, H, P, N), jnp.float32)) * 2,
+                seq_len=S,
+            )
+
+        # conv tail (last W-1 raw conv inputs) so decode can continue seamlessly
+        W = self.d_conv
+        if S >= W - 1:
+            conv_tail = xBC_raw[:, S - (W - 1) : S]
+        else:
+            conv_tail = jnp.pad(xBC_raw, [(0, 0), (W - 1 - S, 0), (0, 0)])
+        return out, Mamba2State(ssm=final_state.astype(jnp.float32), conv=conv_tail.astype(u.dtype))
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int) -> Mamba2State:
+        return Mamba2State(
+            ssm=jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state), jnp.float32),
+            conv=jnp.zeros((batch, self.d_conv - 1, self.conv_dim), self.dtype),
+        )
+
+    def step(self, params, u: jax.Array, state: Mamba2State):
+        """Single-token decode. u: (B, 1, d_model)."""
+        B = u.shape[0]
+        H, P, N = self.n_heads, self.head_dim, self.d_state
+
+        zxbcdt = self._in_proj()(params["in_proj"], u)[:, 0]  # (B, d_in_proj)
+        z, xBC, dt = self._split(zxbcdt)
+        conv_out, conv_state = self._conv().step(params["conv"], xBC, state.conv)
+        xBC = jax.nn.silu(conv_out)
+        x, Bm, Cm = self._split_xbc(xBC)
+        x = x.reshape(B, H, P).astype(jnp.float32)
+        heads_per_group = H // self.n_groups
+        Bm = jnp.repeat(Bm.reshape(B, self.n_groups, N), heads_per_group, axis=1)
+        Cm = jnp.repeat(Cm.reshape(B, self.n_groups, N), heads_per_group, axis=1)
+
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+        A = -jnp.exp(params["A_log"])
+        decay = jnp.exp(dt * A)  # (B, H)
+
+        new_ssm = state.ssm * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", x, Bm.astype(jnp.float32), dt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Cm.astype(jnp.float32))
+        y = y + x * params["D"][None, :, None]
+        y = y.reshape(B, 1, self.d_inner).astype(u.dtype)
+        y = y * jax.nn.silu(z[:, None, :])
+        y = self._norm()(params["norm"], y)
+        out = self._out_proj()(params["out_proj"], y)
+        if tracer.active():
+            tracer.record(
+                "scan", f"{self.name}_step",
+                flops=2.0 * B * H * P * N * 2,
+                bytes_hbm=nbytes((state.ssm.shape, jnp.float32)) * 2,
+                seq_len=1,
+            )
+        return out, Mamba2State(ssm=new_ssm, conv=conv_state)

@@ -1,0 +1,85 @@
+"""Text encoder (CLIP/T5-style bidirectional transformer).
+
+TTI/TTV models consist of several independently-trained components stitched
+together at inference (paper Fig. 2); this is the first stage of every
+pipeline in the suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tracer
+from repro.models.layers.attention import Attention
+from repro.models.layers.basic import Embedding
+from repro.models.layers.mlp import MLP
+from repro.models.layers.norms import LayerNorm
+from repro.nn import Module, ParamDef, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TextEncoderConfig:
+    vocab: int = 49408
+    max_len: int = 77
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    dtype: Any = jnp.float32
+
+
+class TextEncoder(Module):
+    def __init__(self, cfg: TextEncoderConfig):
+        self.cfg = cfg
+
+    def _attn(self):
+        c = self.cfg
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_heads,
+            head_dim=c.d_model // c.n_heads, causal=False, rope=False,
+            qkv_bias=True, out_bias=True, dtype=c.dtype, name="attn",
+        )
+
+    def _mlp(self):
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, activation="gelu", gated=False,
+                   use_bias=True, dtype=c.dtype)
+
+    def _ln(self, name):
+        return LayerNorm(self.cfg.d_model, dtype=self.cfg.dtype, name=name)
+
+    def _layer_defs(self):
+        return {
+            "ln1": self._ln("ln1").defs(),
+            "attn": self._attn().defs(),
+            "ln2": self._ln("ln2").defs(),
+            "mlp": self._mlp().defs(),
+        }
+
+    def defs(self):
+        c = self.cfg
+        d = {
+            "embed": Embedding(c.vocab, c.d_model, dtype=c.dtype).defs(),
+            "pos": ParamDef((c.max_len, c.d_model), (None, "embed"),
+                            normal_init(0.01), c.dtype),
+            "final_ln": self._ln("final_ln").defs(),
+        }
+        for i in range(c.n_layers):
+            d[f"layer{i}"] = self._layer_defs()
+        return d
+
+    def __call__(self, params, tokens, *, impl="auto"):
+        c = self.cfg
+        B, S = tokens.shape
+        x = Embedding(c.vocab, c.d_model, dtype=c.dtype)(params["embed"], tokens)
+        x = x + params["pos"][:S].astype(x.dtype)[None]
+        for i in range(c.n_layers):
+            p = params[f"layer{i}"]
+            with tracer.scope(f"text_enc_layer{i}"):
+                x = x + self._attn()(p["attn"], self._ln("ln1")(p["ln1"], x), impl=impl)
+                x = x + self._mlp()(p["mlp"], self._ln("ln2")(p["ln2"], x))
+        return self._ln("final_ln")(params["final_ln"], x)

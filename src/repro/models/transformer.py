@@ -1,0 +1,647 @@
+"""Scan-over-layers transformer LM backbone covering every assigned family.
+
+One class, config-driven:
+  * dense GQA transformers        (olmo, qwen2, glm4, stablelm, qwen2-vl)
+  * MoE transformers              (qwen3-moe, deepseek-moe; first-k-dense)
+  * attention-free SSM            (mamba2)
+  * hybrid RG-LRU + local attn    (recurrentgemma, 2:1 pattern)
+  * encoder-decoder               (whisper; cross-attention decoder)
+
+Compile-time posture: homogeneous stacks (dense/moe/ssm) run as a single
+``lax.scan`` over stacked layer params — compile time is O(1) in depth, which
+is what makes the 80-layer qwen2-72b dry-run tractable.  Heterogeneous
+(hybrid/enc-dec) stacks unroll in Python.  When the characterization tracer
+is active the forward always unrolls so per-layer operator events are
+recorded in true call order (the paper's Fig. 7 sequence-length profile
+depends on call order).
+
+Three entry points mirror the paper's Table III phases:
+  * ``loss`` / ``forward``    — training
+  * ``prefill``               — process a prompt, build the KV cache
+  * ``decode_step``           — one token against the cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core import tracer
+from repro.models.layers import (
+    Attention,
+    AttentionCache,
+    Dense,
+    Embedding,
+    LayerNorm,
+    MLP,
+    MoE,
+    Mamba2Mixer,
+    RGLRUBlock,
+    RMSNorm,
+)
+from repro.models.layers.ssm import Mamba2State
+from repro.models.layers.rglru import RGLRUState
+from repro.nn import Module, init_defs, specs_of
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Block(Module):
+    """One residual layer of the given type."""
+
+    cfg: LMConfig
+    block_type: str  # dense | moe | mamba2 | rglru | local_attn | cross (enc-dec decoder)
+    causal: bool = True
+    with_cross: bool = False
+
+    # -- submodule builders -------------------------------------------------
+
+    def _norm(self, name):
+        c = self.cfg
+        if c.norm == "rmsnorm":
+            return RMSNorm(c.d_model, dtype=c.dtype, name=name)
+        if c.norm == "layernorm":
+            return LayerNorm(c.d_model, dtype=c.dtype, name=name)
+        if c.norm == "nonparametric_ln":
+            return LayerNorm(c.d_model, with_scale=False, with_bias=False,
+                             dtype=c.dtype, name=name)
+        raise ValueError(c.norm)
+
+    def _attn(self):
+        c = self.cfg
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.resolved_head_dim, qkv_bias=c.qkv_bias,
+            qk_norm=c.qk_norm, rope=not c.is_encdec,  # whisper: learned abs pos
+            rope_base=c.rope_base, rope_pct=c.rope_pct,
+            mrope_sections=c.mrope_sections,
+            causal=self.causal,
+            window=c.window if self.block_type == "local_attn" else None,
+            dtype=c.dtype, name="attn",
+        )
+
+    def _cross_attn(self):
+        c = self.cfg
+        return Attention(
+            d_model=c.d_model, n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.resolved_head_dim, qkv_bias=c.qkv_bias,
+            rope=False, cross=True, causal=False, dtype=c.dtype, name="cross_attn",
+        )
+
+    def _mlp(self):
+        c = self.cfg
+        return MLP(c.d_model, c.d_ff, activation=c.mlp_activation,
+                   gated=c.mlp_gated, dtype=c.dtype)
+
+    def _moe(self):
+        c, m = self.cfg, self.cfg.moe
+        return MoE(
+            d_model=c.d_model, d_ff_expert=m.d_ff_expert, n_experts=m.n_experts,
+            top_k=m.top_k, n_shared=m.n_shared, d_ff_shared=m.d_ff_shared,
+            capacity_factor=m.capacity_factor, activation=c.mlp_activation,
+            dtype=c.dtype,
+        )
+
+    def _mamba(self):
+        c, s = self.cfg, self.cfg.ssm
+        return Mamba2Mixer(
+            d_model=c.d_model, d_state=s.d_state, d_conv=s.d_conv,
+            expand=s.expand, head_dim=s.head_dim, chunk=s.chunk, dtype=c.dtype,
+        )
+
+    def _rglru(self):
+        c = self.cfg
+        return RGLRUBlock(d_model=c.d_model, d_rnn=c.d_model, dtype=c.dtype)
+
+    # -- defs ----------------------------------------------------------------
+
+    def defs(self):
+        t = self.block_type
+        d: dict = {"norm1": self._norm("norm1").defs()}
+        if t in ("dense", "moe", "local_attn"):
+            d["attn"] = self._attn().defs()
+            d["norm2"] = self._norm("norm2").defs()
+            if t == "moe":
+                d["moe"] = self._moe().defs()
+            else:
+                d["mlp"] = self._mlp().defs()
+        elif t == "mamba2":
+            d["mixer"] = self._mamba().defs()
+        elif t == "rglru":
+            d["rglru"] = self._rglru().defs()
+            d["norm2"] = self._norm("norm2").defs()
+            d["mlp"] = self._mlp().defs()
+        else:
+            raise ValueError(t)
+        if self.with_cross:
+            d["cross_attn"] = self._cross_attn().defs()
+            d["norm_cross"] = self._norm("norm_cross").defs()
+        return d
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def __call__(self, params, x, *, positions=None, context=None,
+                 impl="auto", state=None, return_state=False):
+        """Returns (x, aux_loss, new_state)."""
+        t = self.block_type
+        aux = jnp.zeros((), jnp.float32)
+        new_state: Any = None
+        if t in ("dense", "moe", "local_attn"):
+            h = self._norm("norm1")(params["norm1"], x)
+            if return_state:
+                attn_out, kv = self._attn()(
+                    params["attn"], h, positions=positions, impl=impl, return_kv=True
+                )
+                new_state = {"attn": kv}
+            else:
+                attn_out = self._attn()(params["attn"], h, positions=positions, impl=impl)
+            x = x + attn_out
+            if self.with_cross:
+                hc = self._norm("norm_cross")(params["norm_cross"], x)
+                x = x + self._cross_attn()(
+                    params["cross_attn"], hc, context=context, impl=impl
+                )
+            h2 = self._norm("norm2")(params["norm2"], x)
+            if t == "moe":
+                y, aux = self._moe()(params["moe"], h2)
+            else:
+                y = self._mlp()(params["mlp"], h2)
+            x = x + y
+        elif t == "mamba2":
+            h = self._norm("norm1")(params["norm1"], x)
+            y, st = self._mamba()(params["mixer"], h)
+            x = x + y
+            new_state = {"ssm": st}
+        elif t == "rglru":
+            h = self._norm("norm1")(params["norm1"], x)
+            y, st = self._rglru()(params["rglru"], h)
+            x = x + y
+            x = x + self._mlp()(params["mlp"], self._norm("norm2")(params["norm2"], x))
+            new_state = {"rnn": st}
+        return x, aux, new_state
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode(self, params, x, state, cur_len, *, cross_cache=None):
+        """x (B,1,d). Returns (x, new_state)."""
+        t = self.block_type
+        if t in ("dense", "moe", "local_attn"):
+            h = self._norm("norm1")(params["norm1"], x)
+            attn_out, kv = self._attn().decode(params["attn"], h, state["attn"], cur_len)
+            x = x + attn_out
+            new_state = {"attn": kv}
+            if self.with_cross:
+                hc = self._norm("norm_cross")(params["norm_cross"], x)
+                y, _ = self._cross_attn().decode(
+                    params["cross_attn"], hc, None, cur_len, cross_cache=cross_cache
+                )
+                x = x + y
+            h2 = self._norm("norm2")(params["norm2"], x)
+            if t == "moe":
+                y, _ = self._moe()(params["moe"], h2, no_drop=True)
+            else:
+                y = self._mlp()(params["mlp"], h2)
+            x = x + y
+        elif t == "mamba2":
+            h = self._norm("norm1")(params["norm1"], x)
+            y, st = self._mamba().step(params["mixer"], h, state["ssm"])
+            x = x + y
+            new_state = {"ssm": st}
+        elif t == "rglru":
+            h = self._norm("norm1")(params["norm1"], x)
+            y, st = self._rglru().step(params["rglru"], h, state["rnn"])
+            x = x + y
+            x = x + self._mlp()(params["mlp"], self._norm("norm2")(params["norm2"], x))
+            new_state = {"rnn": st}
+        else:
+            raise ValueError(t)
+        return x, new_state
+
+    # -- cache init -------------------------------------------------------------
+
+    def init_state(self, batch: int, max_len: int):
+        t = self.block_type
+        c = self.cfg
+        if t in ("dense", "moe", "local_attn"):
+            cache_len = max_len
+            if t == "local_attn" and c.window is not None:
+                cache_len = min(max_len, c.window)  # ring-ish window cache
+            return {"attn": self._attn().init_cache(batch, cache_len, dtype=c.dtype)}
+        if t == "mamba2":
+            return {"ssm": self._mamba().init_state(batch)}
+        if t == "rglru":
+            return {"rnn": self._rglru().init_state(batch)}
+        raise ValueError(t)
+
+
+# ---------------------------------------------------------------------------
+# The LM
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM(Module):
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        self.types = cfg.block_types()
+        # contiguous runs of identical block types -> scan groups
+        self.groups: list[tuple[str, int]] = []
+        for t in self.types:
+            if self.groups and self.groups[-1][0] == t:
+                self.groups[-1] = (t, self.groups[-1][1] + 1)
+            else:
+                self.groups.append((t, 1))
+
+    # -- submodules -----------------------------------------------------------
+
+    def _embed(self):
+        c = self.cfg
+        return Embedding(c.vocab, c.d_model, dtype=c.dtype)
+
+    def _final_norm(self):
+        c = self.cfg
+        name = "final_norm"
+        if c.norm == "layernorm":
+            return LayerNorm(c.d_model, dtype=c.dtype, name=name)
+        if c.norm == "nonparametric_ln":
+            return LayerNorm(c.d_model, with_scale=False, with_bias=False,
+                             dtype=c.dtype, name=name)
+        return RMSNorm(c.d_model, dtype=c.dtype, name=name)
+
+    def _lm_head(self):
+        c = self.cfg
+        return Dense(c.d_model, c.vocab, False, axes=("embed", "vocab"),
+                     dtype=c.dtype, name="lm_head")
+
+    def _block(self, t: str, with_cross=False) -> Block:
+        return Block(self.cfg, t, causal=True, with_cross=with_cross)
+
+    def _enc_block(self) -> Block:
+        return Block(self.cfg, "dense", causal=False)
+
+    # -- defs -------------------------------------------------------------------
+
+    def defs(self):
+        c = self.cfg
+        d: dict = {"embed": self._embed().defs(), "final_norm": self._final_norm().defs()}
+        if not c.tie_embeddings:
+            d["lm_head"] = self._lm_head().defs()
+        dec_cross = c.is_encdec
+        d["blocks"] = {
+            f"g{i}_{t}": _stack_defs(self._block(t, with_cross=dec_cross).defs(), n)
+            for i, (t, n) in enumerate(self.groups)
+        }
+        if c.is_encdec:
+            d["encoder"] = {
+                "blocks": _stack_defs(self._enc_block().defs(), c.encoder.n_layers),
+                "final_norm": self._final_norm().defs(),
+            }
+        return d
+
+    def init(self, key):
+        c = self.cfg
+        parts: dict = {
+            "embed": init_defs(self._embed().defs(), jax.random.fold_in(key, 1)),
+            "final_norm": init_defs(self._final_norm().defs(), jax.random.fold_in(key, 2)),
+        }
+        if not c.tie_embeddings:
+            parts["lm_head"] = init_defs(self._lm_head().defs(), jax.random.fold_in(key, 3))
+        dec_cross = c.is_encdec
+        blocks = {}
+        for i, (t, n) in enumerate(self.groups):
+            block = self._block(t, with_cross=dec_cross)
+            keys = jax.random.split(jax.random.fold_in(key, 100 + i), n)
+            blocks[f"g{i}_{t}"] = jax.vmap(block.init)(keys)
+        parts["blocks"] = blocks
+        if c.is_encdec:
+            enc_block = self._enc_block()
+            keys = jax.random.split(jax.random.fold_in(key, 999), c.encoder.n_layers)
+            parts["encoder"] = {
+                "blocks": jax.vmap(enc_block.init)(keys),
+                "final_norm": init_defs(
+                    self._final_norm().defs(), jax.random.fold_in(key, 998)
+                ),
+            }
+        return parts
+
+    # -- encoder (whisper) -------------------------------------------------------
+
+    def encode(self, params, enc_embeds, *, impl="auto", unroll: bool = False):
+        """enc_embeds: (B, S_enc, d) precomputed frame embeddings (stub frontend)."""
+        c = self.cfg
+        x = enc_embeds
+        block = self._enc_block()
+        n = c.encoder.n_layers
+
+        def body(x, layer_params):
+            y, _, _ = block(layer_params, x, positions=None, impl=impl)
+            return y, None
+
+        if tracer.active() or unroll:
+            for i in range(n):
+                with tracer.scope(f"enc{i}"):
+                    lp = jax.tree.map(lambda a: a[i], params["encoder"]["blocks"])
+                    x, _ = body(x, lp)
+        else:
+            x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return self._final_norm()(params["encoder"]["final_norm"], x)
+
+    # -- forward -------------------------------------------------------------------
+
+    def forward(
+        self,
+        params,
+        tokens=None,  # (B, S) int32
+        *,
+        embeds=None,  # (B, S, d) if cfg.embed_inputs
+        positions=None,
+        enc_embeds=None,  # encoder inputs for enc-dec
+        mrope_positions=None,  # (3, B, S) for vlm
+        impl="auto",
+        remat: str = "none",  # none | dots | full
+        unroll: bool = False,  # python-loop layers (depth-exact cost analysis)
+    ):
+        """Full forward -> (logits, aux_loss)."""
+        c = self.cfg
+        if embeds is not None:
+            x = embeds.astype(c.dtype)
+            B, S = x.shape[:2]
+        else:
+            x = self._embed()(params["embed"], tokens)
+            B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if mrope_positions is not None:
+            positions = mrope_positions
+
+        context = None
+        if c.is_encdec:
+            # whisper-style absolute positions for the decoder (no RoPE)
+            from repro.models.layers.basic import sinusoidal_embedding
+
+            x = x + sinusoidal_embedding(positions, c.d_model).astype(x.dtype)
+            assert enc_embeds is not None
+            with tracer.scope("encoder"):
+                context = self.encode(params, enc_embeds, impl=impl, unroll=unroll)
+
+        from repro.parallel.sharding import constrain
+
+        x = constrain(x, ("batch", None, None))
+        aux_total = jnp.zeros((), jnp.float32)
+        dec_cross = c.is_encdec
+        for i, (t, n) in enumerate(self.groups):
+            block = self._block(t, with_cross=dec_cross)
+            gparams = params["blocks"][f"g{i}_{t}"]
+
+            def body(carry, layer_params, block=block):
+                x, aux = carry
+                y, a, _ = block(
+                    layer_params, x, positions=positions, context=context, impl=impl
+                )
+                y = constrain(y, ("batch", None, None))
+                return (y, aux + a), None
+
+            if remat != "none":
+                policy = (
+                    jax.checkpoint_policies.checkpoint_dots
+                    if remat == "dots"
+                    else jax.checkpoint_policies.nothing_saveable
+                )
+                body = jax.checkpoint(body, policy=policy, static_argnums=())
+
+            if tracer.active() or unroll:
+                for j in range(n):
+                    with tracer.scope(f"layer_g{i}_{j}_{t}"):
+                        lp = jax.tree.map(lambda a: a[j], gparams)
+                        (x, aux_total), _ = body((x, aux_total), lp)
+            else:
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), gparams)
+
+        x = self._final_norm()(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], x)
+        else:
+            logits = self._lm_head()(params["lm_head"], x)
+        logits = constrain(logits, ("batch", None, "model"))
+        return logits, aux_total
+
+    # -- loss --------------------------------------------------------------------
+
+    def loss(self, params, batch, *, impl="auto", remat: str = "none",
+             unroll: bool = False):
+        """batch: dict with tokens/labels (+ enc_embeds / embeds / mrope)."""
+        logits, aux = self.forward(
+            params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+            impl=impl,
+            remat=remat,
+            unroll=unroll,
+        )
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((logz - label_logit) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return nll + aux
+
+    # -- prefill / decode -----------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int):
+        caches = []
+        for i, (t, n) in enumerate(self.groups):
+            block = self._block(t, with_cross=self.cfg.is_encdec)
+            one = block.init_state(batch, max_len)
+            caches.append(jax.tree.map(lambda a: jnp.stack([a] * n), one))
+        return caches
+
+    def prefill(self, params, tokens=None, *, embeds=None, enc_embeds=None,
+                mrope_positions=None, impl="auto", max_len: int | None = None,
+                unroll: bool = False):
+        """Process a prompt; returns (last_logits, cache_list, context).
+
+        ``max_len`` pads attention caches to decode capacity (local-window
+        blocks get ring-buffer layout of size min(window, max_len))."""
+        c = self.cfg
+        if embeds is not None:
+            x = embeds.astype(c.dtype)
+            B, S = x.shape[:2]
+        else:
+            x = self._embed()(params["embed"], tokens)
+            B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if mrope_positions is not None:
+            positions = mrope_positions
+        context = None
+        if c.is_encdec:
+            from repro.models.layers.basic import sinusoidal_embedding
+
+            x = x + sinusoidal_embedding(positions, c.d_model).astype(x.dtype)
+            context = self.encode(params, enc_embeds, impl=impl, unroll=unroll)
+
+        caches = []
+        for i, (t, n) in enumerate(self.groups):
+            block = self._block(t, with_cross=c.is_encdec)
+            gparams = params["blocks"][f"g{i}_{t}"]
+
+            def body(x, layer_params, block=block):
+                y, _, st = block(
+                    layer_params, x, positions=positions, context=context,
+                    impl=impl, return_state=True,
+                )
+                return y, st
+
+            if tracer.active() or unroll:
+                sts = []
+                for j in range(n):
+                    with tracer.scope(f"layer_g{i}_{j}_{t}"):
+                        lp = jax.tree.map(lambda a: a[j], gparams)
+                        x, st = body(x, lp)
+                        sts.append(st)
+                states = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+            else:
+                x, states = jax.lax.scan(body, x, gparams)
+            if max_len is not None and t in ("dense", "moe", "local_attn"):
+                states = {"attn": _to_capacity(
+                    states["attn"], S, max_len,
+                    window=c.window if t == "local_attn" else None,
+                )}
+            caches.append(states)
+
+        x = self._final_norm()(params["final_norm"], x)
+        last = x[:, -1:]
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], last)
+        else:
+            logits = self._lm_head()(params["lm_head"], last)
+        return logits, caches, context
+
+    def decode_step(self, params, token, caches, cur_len, *, context=None,
+                    cross_len=None, impl="auto", unroll: bool = False):
+        """token (B, 1) or embeds (B, 1, d); cur_len scalar int32.
+
+        Returns (logits (B,1,V), new_caches)."""
+        c = self.cfg
+        if c.embed_inputs and token.ndim == 3:
+            x = token.astype(c.dtype)
+        else:
+            x = self._embed()(params["embed"], token)
+        B = x.shape[0]
+        if c.is_encdec:
+            from repro.models.layers.basic import sinusoidal_embedding
+
+            pos = jnp.broadcast_to(cur_len, (B, 1)).astype(jnp.int32)
+            x = x + sinusoidal_embedding(pos, c.d_model).astype(x.dtype)
+
+        cross_cache = None
+        if c.is_encdec and context is not None:
+            # build per-layer cross K/V lazily from context: recomputing the
+            # projection per step is wasteful; serve path precomputes instead.
+            pass
+
+        new_caches = []
+        for i, (t, n) in enumerate(self.groups):
+            block = self._block(t, with_cross=c.is_encdec)
+            gparams = params["blocks"][f"g{i}_{t}"]
+            group_cache = caches[i]
+
+            if c.is_encdec:
+                # enc-dec decode is unrolled (cross-attn needs the context)
+                sts = []
+                for j in range(n):
+                    lp = jax.tree.map(lambda a: a[j], gparams)
+                    st = jax.tree.map(lambda a: a[j], group_cache)
+                    cc = AttentionCache(
+                        k=block._cross_attn()._split_heads(
+                            block._cross_attn()._wk()(lp["cross_attn"]["wk"], context),
+                            c.n_kv_heads,
+                        ),
+                        v=block._cross_attn()._split_heads(
+                            block._cross_attn()._wv()(lp["cross_attn"]["wv"], context),
+                            c.n_kv_heads,
+                        ),
+                    )
+                    x, st_new = block.decode(lp, x, st, cur_len, cross_cache=cc)
+                    sts.append(st_new)
+                states = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+            else:
+
+                def body(x, inp, block=block):
+                    layer_params, st = inp
+                    y, st_new = block.decode(layer_params, x, st, cur_len)
+                    return y, st_new
+
+                if tracer.active() or unroll:
+                    sts = []
+                    for j in range(n):
+                        with tracer.scope(f"layer_g{i}_{j}_{t}"):
+                            lp = jax.tree.map(lambda a: a[j], gparams)
+                            st = jax.tree.map(lambda a: a[j], group_cache)
+                            x, st_new = body(x, (lp, st))
+                            sts.append(st_new)
+                    states = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+                else:
+                    x, states = jax.lax.scan(body, x, (gparams, group_cache))
+            new_caches.append(states)
+
+        x = self._final_norm()(params["final_norm"], x)
+        if c.tie_embeddings:
+            logits = self._embed().attend(params["embed"], x)
+        else:
+            logits = self._lm_head()(params["lm_head"], x)
+        return logits, new_caches
+
+
+def _to_capacity(kv: AttentionCache, S: int, max_len: int, *, window=None) -> AttentionCache:
+    """Re-layout prefilled KV (n, B, S, KVH, D) for decode capacity.
+
+    Full attention: pad the seq axis to ``max_len``.  Local-window blocks use
+    an O(window) ring buffer where position p lives in slot p % cap; the
+    linear prefill order therefore gets rolled by S % cap so subsequent
+    decode writes (at cur_len % cap) line up.
+    """
+
+    def fix(x):
+        if window is not None:
+            cap = min(window, max_len)
+            if S <= cap:
+                pad = [(0, 0), (0, 0), (0, cap - S), (0, 0), (0, 0)]
+                return jnp.pad(x, pad)
+            tail = x[:, :, S - cap :]
+            return jnp.roll(tail, S % cap, axis=2)
+        if S >= max_len:
+            return x[:, :, :max_len]
+        pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return jnp.pad(x, pad)
+
+    return AttentionCache(k=fix(kv.k), v=fix(kv.v))
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a layers axis to every ParamDef in a defs tree (for specs)."""
+    from repro.nn.module import ParamDef
+
+    def rec(d):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, ParamDef):
+                out[k] = ParamDef(
+                    (n,) + tuple(v.shape), ("layers",) + tuple(v.axes), v.init, v.dtype
+                )
+            else:
+                out[k] = rec(v)
+        return out
+
+    return rec(defs)

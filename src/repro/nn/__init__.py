@@ -1,0 +1,36 @@
+"""Minimal functional module system with logical sharding axes.
+
+Design: a ``Module`` is a frozen config object. Parameters live in plain
+nested-dict pytrees; every module can describe its parameters declaratively
+(``defs()``), from which ``init(key)`` (materialize) and ``specs()``
+(logical-axis pytree for pjit sharding rules) are derived. No global state,
+no tracing magic — everything composes with jit/scan/vmap/shard_map.
+"""
+
+from repro.nn.module import (
+    Module,
+    ParamDef,
+    init_defs,
+    specs_of,
+    stacked_init,
+    stacked_specs,
+    zeros_init,
+    normal_init,
+    scaled_init,
+    ones_init,
+    count_params,
+)
+
+__all__ = [
+    "Module",
+    "ParamDef",
+    "init_defs",
+    "specs_of",
+    "stacked_init",
+    "stacked_specs",
+    "zeros_init",
+    "normal_init",
+    "scaled_init",
+    "ones_init",
+    "count_params",
+]

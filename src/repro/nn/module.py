@@ -1,0 +1,173 @@
+"""Functional module base: declarative params + logical sharding axes.
+
+Every layer in the framework subclasses :class:`Module` and implements:
+
+* ``defs() -> nested dict`` whose leaves are :class:`ParamDef` (or nested
+  dicts produced by a sub-module's ``defs()``).
+* ``__call__(params, *args, **kwargs)`` — pure function of the param pytree.
+
+From ``defs()`` we derive:
+
+* ``init(key) -> params``  — materialized pytree (one PRNG fold per leaf path,
+  so adding parameters never reshuffles existing inits).
+* ``specs() -> pytree``    — same structure, leaves are tuples of *logical*
+  axis names (e.g. ``("embed", "mlp")``).  ``repro.parallel.sharding`` maps
+  logical names onto physical mesh axes.
+
+Scanned (stacked-over-layers) parameters are produced with
+:func:`stacked_init` / :func:`stacked_specs`, which prepend a ``"layers"``
+axis to every leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02) -> Callable:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def scaled_init(fan_in_axes: tuple[int, ...] = (0,)) -> Callable:
+    """LeCun-normal style init: stddev = 1/sqrt(fan_in)."""
+
+    def init(key, shape, dtype):
+        fan_in = max(1, int(np.prod([shape[a] for a in fan_in_axes])))
+        stddev = 1.0 / math.sqrt(fan_in)
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# ParamDef + derivation of init/specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = replicated)
+    init: Callable = normal_init()
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamDef shape {self.shape} and axes {self.axes} rank mismatch"
+            )
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_defs(defs: Mapping[str, Any], key: Array, _path: str = "") -> PyTree:
+    """Materialize a nested dict of ParamDef into arrays.
+
+    PRNG keys are derived by folding a stable hash of each leaf path into the
+    root key, so the init of one leaf is independent of tree iteration order.
+    """
+    out = {}
+    for name, sub in defs.items():
+        path = f"{_path}/{name}"
+        if _is_def(sub):
+            leaf_key = jax.random.fold_in(key, _stable_hash(path))
+            out[name] = sub.init(leaf_key, sub.shape, sub.dtype)
+        elif isinstance(sub, Mapping):
+            out[name] = init_defs(sub, key, path)
+        else:
+            raise TypeError(f"Unexpected defs leaf at {path}: {type(sub)}")
+    return out
+
+
+def specs_of(defs: Mapping[str, Any]) -> PyTree:
+    """Extract the logical-axis pytree matching the param structure."""
+    out = {}
+    for name, sub in defs.items():
+        if _is_def(sub):
+            out[name] = sub.axes
+        elif isinstance(sub, Mapping):
+            out[name] = specs_of(sub)
+        else:
+            raise TypeError(f"Unexpected defs leaf: {type(sub)}")
+    return out
+
+
+def _stable_hash(s: str) -> int:
+    # Deterministic across processes (unlike built-in hash with PYTHONHASHSEED).
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Module base
+# ---------------------------------------------------------------------------
+
+
+class Module:
+    """Base class: config-bearing, stateless, pure-functional apply."""
+
+    def defs(self) -> dict:
+        raise NotImplementedError
+
+    def init(self, key: Array) -> PyTree:
+        return init_defs(self.defs(), key)
+
+    def specs(self) -> PyTree:
+        return specs_of(self.defs())
+
+    # Subclasses implement __call__(params, ...)
+
+
+def stacked_init(module: Module, key: Array, n: int) -> PyTree:
+    """Initialize ``n`` copies of ``module`` stacked on a leading axis.
+
+    Used for scan-over-layers: the resulting pytree has every leaf with an
+    extra leading dim of size ``n``.
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(module.init)(keys)
+
+
+def stacked_specs(module: Module, axis_name: str | None = "layers") -> PyTree:
+    """Specs for a stacked param tree: prepend the scan axis to every leaf."""
+    return jax.tree.map(
+        lambda axes: (axis_name,) + tuple(axes),
+        module.specs(),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    batch_axes,
+    logical_to_sharding,
+    shard_params_tree,
+    spec_for,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "batch_axes",
+    "logical_to_sharding",
+    "shard_params_tree",
+    "spec_for",
+]

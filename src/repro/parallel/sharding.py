@@ -1,0 +1,232 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter in the framework carries a tuple of *logical* axis names
+(from ``Module.specs()``).  This module maps them onto the physical mesh:
+
+    mesh axes: ("pod", "data", "model")  [multi-pod]  /  ("data", "model")
+
+Parallelism encoded by the default rules:
+  * FSDP / ZeRO-3 — the "embed" axis of every weight shards over ``data``
+    (weights gather on use, gradients reduce-scatter), optimizer state
+    inherits the same sharding.
+  * TP — "mlp" / "heads" / "vocab" axes shard over ``model``.
+  * EP — "experts" shards over ``model`` (MoE expert parallelism).
+  * DP — the batch dim of activations shards over ``("pod", "data")``:
+    cross-pod traffic is the gradient all-reduce only (DCN-friendly).
+  * SP — KV caches shard their sequence axis over ``model`` at decode
+    (flash-decoding style); prefill activations shard batch over data.
+
+A rule only applies when the dimension divides the axis size (e.g. GQA
+kv_heads=8 on a model axis of 16 stays replicated) — this keeps one rule set
+valid across all ten architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (None = replicate)
+DEFAULT_RULES: dict[str, Any] = {
+    "embed": "data",  # FSDP
+    "embed2": None,
+    "mlp": "model",  # TP
+    "mlp2": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_heads_small": None,  # GQA with kv < TP width: replicate (see attention.py)
+    "vocab": "model",
+    "experts": "model",  # EP
+    "layers": None,
+    "conv_in": None,
+    "conv_out": None,
+    "norm": None,
+    None: None,
+}
+
+# Pure data parallelism + ZeRO-3 over the whole chip grid: no per-layer TP
+# activation all-reduces — the right profile for models whose layers fit a
+# chip (the §Perf hillclimb shows the crossover vs "2d").
+FSDP_RULES: dict[str, Any] = {
+    **DEFAULT_RULES,
+    "embed": ("data", "model"),
+    "mlp": None,
+    "heads": None,
+    "kv_heads": None,
+    "vocab": None,
+    "experts": "model",
+}
+
+# Serving profile: weights replicated across the data axis (TP-sharded on
+# model only) — no ZeRO gathers on the per-token critical path.  The §Perf
+# optimized sweep uses this for decode cells: FSDP-at-use is a training
+# memory trade that is exactly wrong for single-token decode.
+SERVE_RULES: dict[str, Any] = {
+    **DEFAULT_RULES,
+    "embed": None,
+}
+
+PROFILES = {
+    "2d": {"rules": DEFAULT_RULES, "batch": ("pod", "data")},
+    "fsdp": {"rules": FSDP_RULES, "batch": ("pod", "data", "model")},
+    "serve": {"rules": SERVE_RULES, "batch": ("pod", "data")},
+}
+
+_current_profile = "2d"
+
+
+def set_profile(name: str) -> None:
+    global _current_profile
+    if name not in PROFILES:
+        raise KeyError(f"unknown sharding profile {name!r}; have {list(PROFILES)}")
+    _current_profile = name
+
+
+def current_profile() -> str:
+    return _current_profile
+
+
+def current_rules() -> dict:
+    return PROFILES[_current_profile]["rules"]
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes over which the batch dim shards (DP), per active profile."""
+    want = PROFILES[_current_profile]["batch"]
+    return tuple(a for a in want if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for(
+    logical_axes: tuple,
+    shape: tuple,
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    """Logical axes tuple + concrete shape -> PartitionSpec, respecting
+    divisibility (a dim that doesn't divide its axis stays replicated)."""
+    rules = rules or current_rules()
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    out = []
+    used: set = set()
+    for name, dim in zip(logical_axes, shape):
+        axis = rules.get(name, None)
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if any(a not in mesh.axis_names for a in axes) or any(a in used for a in axes):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, axis) != 0:
+            out.append(None)  # e.g. kv_heads=8 on model=16
+            continue
+        out.append(axis)
+        used.update(axes)
+    return P(*out)
+
+
+def logical_to_sharding(specs_tree, shapes_tree, mesh: Mesh, rules=None):
+    """Map a specs pytree (tuples of logical names) + matching shapes pytree
+    (ShapeDtypeStruct or arrays) -> NamedSharding pytree."""
+
+    def one(axes, shaped):
+        return NamedSharding(mesh, spec_for(tuple(axes), tuple(shaped.shape), mesh, rules))
+
+    return jax.tree.map(
+        one, specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def shard_params_tree(params, specs_tree, mesh: Mesh, rules=None):
+    """Device-put a concrete params pytree according to the rules."""
+    shardings = logical_to_sharding(specs_tree, params, mesh, rules)
+    return jax.tree.map(jax.device_put, params, shardings)
+
+
+def constrain(x, spec_names: tuple):
+    """Activation sharding constraint using the ambient mesh context.
+
+    ``spec_names`` entries: "batch" (expands to the pod x data axes), a mesh
+    axis name, or None.  No-op outside a mesh context (unit tests) and for
+    dims that don't divide their axis (long_500k batch=1 stays replicated).
+    """
+    from jax._src import mesh as mesh_lib
+
+    env_mesh = mesh_lib.thread_resources.env.physical_mesh
+    if env_mesh.empty:
+        env_mesh = mesh_lib.get_concrete_mesh()
+        if env_mesh is None or getattr(env_mesh, "empty", True):
+            return x
+    parts = []
+    used: set = set()
+    for dim, name in zip(x.shape, spec_names):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = batch_axes(env_mesh) if name == "batch" else (
+            name if isinstance(name, tuple) else (name,)
+        )
+        axes = tuple(a for a in axes if a in env_mesh.axis_names and a not in used)
+        # largest divisible prefix
+        while axes:
+            n = 1
+            for a in axes:
+                n *= env_mesh.shape[a]
+            if dim % n == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env_mesh, P(*parts))
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def data_sharding(mesh: Mesh, *trailing) -> NamedSharding:
+    """Batch-sharded activation: P((pod, data), *trailing)."""
+    ba = batch_axes(mesh)
+    lead = ba if len(ba) > 1 else (ba[0] if ba else None)
+    return NamedSharding(mesh, P(lead, *trailing))
+
+
+def batch_sharding_for(mesh: Mesh, global_batch: int, ndim: int,
+                       trailing: tuple = ()) -> NamedSharding:
+    """Shard dim-0 over (pod, data) if divisible, else over data, else
+    replicate (long_500k has batch=1)."""
+    ba = batch_axes(mesh)
+    # try the largest divisible prefix product
+    for k in range(len(ba), 0, -1):
+        axes = ba[:k]
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if global_batch % n == 0:
+            lead = axes if len(axes) > 1 else axes[0]
+            spec = [lead] + [None] * (ndim - 1)
+            for i, t in enumerate(trailing):
+                spec[i + 1] = t
+            return NamedSharding(mesh, P(*spec))
+    return NamedSharding(mesh, P(*([None] * ndim)))

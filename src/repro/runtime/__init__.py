@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import FaultTolerantRunner, RunnerConfig
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["FaultTolerantRunner", "RunnerConfig", "StragglerMonitor"]

@@ -1,0 +1,13 @@
+from repro.serving.scheduler import (
+    BucketedScheduler,
+    DenoisePodScheduler,
+    Request,
+)
+from repro.serving.engine import LMServeEngine
+
+__all__ = [
+    "BucketedScheduler",
+    "DenoisePodScheduler",
+    "Request",
+    "LMServeEngine",
+]

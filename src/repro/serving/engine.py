@@ -1,0 +1,92 @@
+"""Batched LM serving engine: prefill + decode loop over a KV cache.
+
+The Table III "Decode" regime as a running system: requests are admitted
+through the bucketed scheduler, prefilled as a batch, then decoded step by
+step with a shared jitted decode function (one compiled shape per bucket).
+Runs the reduced configs on CPU (tests/examples) and the full configs on the
+production mesh via the same code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import TransformerLM
+from repro.serving.scheduler import BucketedScheduler, Request
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    buckets: tuple = (32, 64, 128)
+    temperature: float = 0.0  # 0 = greedy
+
+
+class LMServeEngine:
+    def __init__(self, cfg: LMConfig, params, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.model = TransformerLM(cfg)
+        self.params = params
+        self.serve_cfg = serve_cfg
+        self.scheduler = BucketedScheduler(serve_cfg.buckets, serve_cfg.max_batch)
+        self._decode_jit = jax.jit(
+            lambda p, tok, caches, cur: self.model.decode_step(p, tok, caches, cur)
+        )
+        self.stats: dict = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    def submit(self, rid: int, prompt_tokens, max_new_tokens: int) -> None:
+        self.scheduler.submit(
+            Request(rid=rid, prompt_len=len(prompt_tokens),
+                    max_new_tokens=max_new_tokens,
+                    state={"prompt": jnp.asarray(prompt_tokens, jnp.int32)})
+        )
+
+    def _pad_prompts(self, batch, bucket: int):
+        toks = jnp.zeros((len(batch), bucket), jnp.int32)
+        for i, r in enumerate(batch):
+            toks = toks.at[i, : r.prompt_len].set(r.state["prompt"])
+        return toks
+
+    def step(self) -> list[tuple[int, list]]:
+        """Serve one scheduled batch to completion; returns (rid, tokens)."""
+        bucket, batch = self.scheduler.next_batch()
+        if not batch:
+            return []
+        toks = self._pad_prompts(batch, bucket)
+        max_new = max(r.max_new_tokens for r in batch)
+        cap = bucket + max_new
+
+        t0 = time.perf_counter()
+        logits, caches, ctx = self.model.prefill(self.params, toks, max_len=cap)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        # NOTE: prompts are right-padded to the bucket; decode starts at the
+        # bucket boundary (padding tokens are part of the compiled shape —
+        # the §V-B trade the bucketed scheduler quantifies via padding_waste)
+        out = [[] for _ in batch]
+        cur = jnp.int32(bucket)
+        next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        t0 = time.perf_counter()
+        for step in range(max_new):
+            for i in range(len(batch)):
+                out[i].append(int(next_tok[i, 0]))
+            logits, caches = self._decode_jit(self.params, next_tok, caches, cur)
+            next_tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+            cur = cur + 1
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["tokens"] += max_new * len(batch)
+        return [(r.rid, out[i][: r.max_new_tokens]) for i, r in enumerate(batch)]
+
+    def run(self) -> dict:
+        results = {}
+        while self.scheduler.pending():
+            for rid, toks in self.step():
+                results[rid] = toks
+        return results

@@ -1,0 +1,106 @@
+"""Training loop: microbatched (gradient-accumulation) steps, mixed
+precision, checkpoint/restart via the fault-tolerant runner.
+
+Used by ``examples/train_tti.py`` (reduced diffusion model, a few hundred
+steps on CPU) and by ``launch/train.py`` (production mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.fault_tolerance import FaultTolerantRunner, RunnerConfig
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 300
+    microbatches: int = 1  # gradient accumulation factor
+    log_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 100
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_accumulating_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                           microbatches: int):
+    """loss_fn(params, batch, key) -> scalar.  Returns jitted step:
+    (params, opt_state, batch, key) -> (params, opt_state, metrics).
+    The batch's leading dim is split into ``microbatches`` slices whose
+    grads are averaged (sequentially — the memory/throughput trade)."""
+
+    def step(params, opt_state, batch, key):
+        def one_micro(carry, mb):
+            acc, k = carry
+            mbatch, = mb
+            k, sub = jax.random.split(k)
+            loss, grads = jax.value_and_grad(loss_fn)(params, mbatch, sub)
+            acc = jax.tree.map(lambda a, g: a + g / microbatches,
+                               acc, grads)
+            return (acc, k), loss
+
+        if microbatches == 1:
+            key, sub = jax.random.split(key)
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, sub)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape(microbatches, -1, *x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, key), losses = jax.lax.scan(one_micro, (zeros, key), (split,))
+            loss = jnp.mean(losses)
+        params2, opt2, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return jax.jit(step)
+
+
+def train(params, loss_fn, data_iter, cfg: TrainConfig, *,
+          state_shardings=None, log=print) -> tuple[Any, list]:
+    """Run the fault-tolerant training loop; returns (state, loss history)."""
+    opt_state = adamw_init(params)
+    step_fn_jit = make_accumulating_step(loss_fn, cfg.opt, cfg.microbatches)
+    history: list = []
+
+    runner = FaultTolerantRunner(RunnerConfig(
+        checkpoint_dir=cfg.checkpoint_dir,
+        checkpoint_every=cfg.checkpoint_every,
+        total_steps=cfg.total_steps,
+    ))
+    runner.install_preemption_handler()
+
+    state = {"params": params, "opt": opt_state,
+             "key": jax.random.PRNGKey(0)}
+
+    t_last = time.perf_counter()
+
+    def one_step(state, step):
+        batch = next(data_iter)
+        params2, opt2, metrics = step_fn_jit(
+            state["params"], state["opt"], batch, state["key"]
+        )
+        key2 = jax.random.fold_in(state["key"], step)
+        return {"params": params2, "opt": opt2, "key": key2,
+                "_metrics": metrics}
+
+    def on_step(step, state):
+        nonlocal t_last
+        m = state.pop("_metrics", None)
+        if m is not None:
+            history.append(float(m["loss"]))
+        if m is not None and step % cfg.log_every == 0:
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            log(f"step {step:5d} loss {float(m['loss']):.4f} "
+                f"gnorm {float(m['grad_norm']):.3f} ({dt:.2f}s/{cfg.log_every})")
+
+    state = runner.run(state, one_step, state_shardings=state_shardings,
+                       on_step=on_step)
+    return state, history

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device — the 512-fake-device flag is set
+# ONLY inside launch/dryrun.py (before jax init), never globally.
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

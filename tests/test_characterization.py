@@ -1,0 +1,102 @@
+"""Tests of the core characterization framework against the paper's claims
+(reduced where compute-bound, full-size via abstract tracing elsewhere)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.suite import build_suite_model, with_dtype
+from repro.core import (
+    amdahl,
+    analytical,
+    characterize,
+    perf_model,
+    prefill_decode,
+    seq_profile,
+)
+
+
+@pytest.fixture(scope="module")
+def sd_events():
+    cfg = with_dtype(get_config("stable-diffusion"), jnp.bfloat16)
+    m = build_suite_model(cfg)
+    params = characterize.abstract_params(m)
+    tokens = jax.ShapeDtypeStruct((1, 77), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    base = characterize.trace_workload(
+        lambda p, t: m.sample(p, t, key, impl="naive"), params, tokens)
+    flash = characterize.trace_workload(
+        lambda p, t: m.sample(p, t, key, impl="blocked_jax"), params, tokens)
+    return base, flash
+
+
+def test_c1_conv_dominates_post_flash(sd_events):
+    """Paper C1: after FA the bottleneck shifts to Convolution."""
+    base, flash = sd_events
+    fb = perf_model.breakdown_fraction(flash)
+    assert max(fb, key=fb.get) == "conv"
+    assert fb["attention"] < 0.3  # paper: 13-25% post-FA
+
+
+def test_c2_flash_speedup_in_plausible_range(sd_events):
+    base, flash = sd_events
+    rep = amdahl.flash_speedup(base, flash)
+    assert 1.2 < rep.e2e_speedup < 5.0
+    # Amdahl consistency: predicted ~= measured
+    assert abs(rep.amdahl_predicted - rep.e2e_speedup) / rep.e2e_speedup < 0.05
+
+
+def test_c3_diffusion_is_prefill_like(sd_events):
+    base, _ = sd_events
+    assert prefill_decode.classify(base)["regime"] == "prefill-like"
+
+
+def test_c4_seq_len_varies_ushape(sd_events):
+    """Paper C4: highly variable sequence length, cyclic/U-shaped."""
+    base, _ = sd_events
+    prof = seq_profile.self_attention_profile(base)
+    assert prof.variation >= 4.0  # paper: 'up to 4x' (we see the full 64x)
+    assert prof.max_seq == 4096  # 64x64 latent at 512px
+    # U-shape: profile decreases then increases within a UNet pass
+    period = seq_profile.fundamental_period(prof.seq_lens)
+    mid = period.index(min(period))
+    assert 0 < mid < len(period) - 1
+
+
+def test_c5_memory_scaling_exponent_is_4():
+    exp = analytical.attn_memory_scaling_exponent([32, 64, 128, 256])
+    assert 3.5 < exp <= 4.05
+
+
+def test_analytic_profile_matches_traced(sd_events):
+    base, _ = sd_events
+    unet_events = [e for e in base if e.name.startswith("unet")]
+    traced = seq_profile.self_attention_profile(unet_events)
+    cfg = get_config("stable-diffusion")
+    pred = analytical.unet_seq_profile(
+        cfg.latent_size, cfg.unet.channel_mult, cfg.unet.num_res_blocks,
+        cfg.unet.attn_levels)
+    # same multiset of per-call sequence lengths for one UNet pass
+    assert sorted(set(pred)) == sorted(set(traced.seq_lens))
+
+
+def test_muse_parallel_decode_constant_seq():
+    cfg = with_dtype(get_config("muse"), jnp.bfloat16)
+    m = build_suite_model(cfg)
+    params = characterize.abstract_params(m)
+    tokens = jax.ShapeDtypeStruct((1, 77), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    ev = characterize.trace_workload(
+        lambda p, t: m.sample(p, t, key, impl="blocked_jax", decode_pixels=False),
+        params, tokens)
+    prof = seq_profile.self_attention_profile(ev)
+    image_seqs = {s for s in prof.seq_lens if s == cfg.image_tokens}
+    assert image_seqs == {cfg.image_tokens}  # flat profile (paper Fig. 7)
+
+
+def test_tracer_scaling_by_denoise_steps(sd_events):
+    base, _ = sd_events
+    cfg = get_config("stable-diffusion")
+    unet_events = [e for e in base if e.repeats == cfg.denoise_steps]
+    assert unet_events, "denoising-loop events must be scaled by step count"

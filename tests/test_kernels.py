@@ -1,0 +1,123 @@
+"""Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles.
+
+Pallas kernels run in interpret mode (CPU executes the kernel body); every
+other impl is swept too.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.groupnorm_silu import ops as gn_ops
+from repro.kernels.groupnorm_silu import ref as gn_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+ATTN_SHAPES = [
+    # B, Sq, Skv, H, KVH, D
+    (1, 128, 128, 4, 4, 64),
+    (2, 200, 200, 8, 2, 64),   # GQA + non-multiple seq
+    (1, 257, 257, 4, 1, 128),  # MQA, prime-ish seq
+    (2, 64, 512, 4, 4, 32),    # cross-attention (Skv != Sq)
+]
+
+
+@pytest.mark.parametrize("impl", ["interpret", "blocked_jax"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+def test_attention_matches_oracle(impl, dtype, shape):
+    B, Sq, Skv, H, KVH, D = shape
+    key = jax.random.PRNGKey(42)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Sq, H, D), dtype)
+    k = jax.random.normal(kk, (B, Skv, KVH, D), dtype)
+    v = jax.random.normal(kv, (B, Skv, KVH, D), dtype)
+    causal = Sq == Skv
+    gold = fa_ref.attention_ref(q, k, v, causal=causal)
+    out = fa_ops.attention(q, k, v, causal=causal, impl=impl,
+                           block_q=128, block_kv=128)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), gold.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("impl", ["interpret", "blocked_jax"])
+@pytest.mark.parametrize("window", [16, 64])
+def test_attention_local_window(impl, window):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 150, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 150, 4, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 150, 4, 32))
+    gold = fa_ref.attention_ref(q, k, v, causal=True, window=window)
+    out = fa_ops.attention(q, k, v, causal=True, window=window, impl=impl,
+                           block_q=128, block_kv=128)
+    np.testing.assert_allclose(out, gold, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "blocked_jax"])
+@pytest.mark.parametrize("F,HW", [(4, 64), (8, 100), (16, 32)])
+def test_temporal_attention_fused_layout(impl, F, HW):
+    key = jax.random.PRNGKey(7)
+    shape = (2, F, HW, 4, 32)
+    xq = jax.random.normal(key, shape)
+    xk = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    xv = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    gold = fa_ref.temporal_attention_ref(xq, xk, xv)
+    out = fa_ops.temporal_attention(xq, xk, xv, impl=impl, block_hw=32)
+    np.testing.assert_allclose(out, gold, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_matches_masked_ref():
+    key = jax.random.PRNGKey(3)
+    B, S, H, KVH, D = 3, 64, 8, 2, 32
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KVH, D))
+    kv_len = jnp.array([5, 64, 33])
+    gold = fa_ref.attention_ref(q, k, v, kv_len=kv_len)
+    out = fa_ops.decode_attention(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(out, gold, rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_grad_matches_naive():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 96, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 96, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 96, 2, 16))
+
+    def loss(fn):
+        return lambda q: (fn(q) ** 2).sum()
+
+    g_naive = jax.grad(loss(lambda q: fa_ops.attention(
+        q, k, v, causal=True, impl="naive")))(q)
+    g_blocked = jax.grad(loss(lambda q: fa_ops.attention(
+        q, k, v, causal=True, impl="blocked_jax", block_q=32, block_kv=32)))(q)
+    np.testing.assert_allclose(g_blocked, g_naive, rtol=1e-4, atol=1e-4)
+
+
+GN_SHAPES = [(2, 1000, 256, 32, 256), (1, 64, 128, 8, 64), (3, 500, 96, 12, 128)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", GN_SHAPES)
+@pytest.mark.parametrize("silu", [True, False])
+def test_groupnorm_silu_matches_oracle(dtype, shape, silu):
+    B, N, C, G, bn = shape
+    key = jax.random.PRNGKey(1)
+    x = (jax.random.normal(key, (B, N, C)) * 3 + 1).astype(dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (C,)) * 0.5 + 1
+    b = jax.random.normal(jax.random.fold_in(key, 2), (C,)) * 0.1
+    gold = gn_ref.groupnorm_silu_ref(x, s, b, groups=G, silu=silu)
+    out = gn_ops.groupnorm_silu(x, s, b, groups=G, silu=silu,
+                                impl="interpret", block_n=bn)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), gold.astype(jnp.float32), **_tol(dtype)
+    )

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.parallel.sharding import spec_for
+from repro.serving.scheduler import BucketedScheduler, Request, bucket_of
+from repro.training.compression import (
+    _dequantize_int8,
+    _quantize_int8,
+    compress_topk,
+    decompress_topk,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    sq=st.integers(1, 65),
+    skv=st.integers(1, 65),
+    h=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+)
+def test_blocked_attention_equals_oracle_any_shape(b, sq, skv, h, group, d, causal):
+    if causal and sq != skv:
+        skv = sq
+    key = jax.random.PRNGKey(b * 1000 + sq * 10 + skv)
+    q = jax.random.normal(key, (b, sq, h * group, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, skv, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, skv, h, d))
+    gold = fa_ref.attention_ref(q, k, v, causal=causal)
+    out = fa_ops.attention(q, k, v, causal=causal, impl="blocked_jax",
+                           block_q=32, block_kv=32)
+    np.testing.assert_allclose(out, gold, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(shift=st.floats(-5, 5), scale=st.floats(0.1, 3))
+def test_attention_softmax_shift_invariance(shift, scale):
+    """softmax(s + c) == softmax(s): adding a constant to all logits (e.g.
+    via k -> k + c*1 along a rank-1 direction aligned with q) is identity."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 16, 2, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 16, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 16, 2, 8))
+    base = fa_ref.attention_ref(q, k, v)
+    # scaling q and compensating the softmax scale is identity
+    out = fa_ref.attention_ref(q * scale, k, v, scale=(8 ** -0.5) / scale)
+    np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    vocab_dim=st.sampled_from([32, 48, 64]),
+    axis=st.sampled_from(["model", "data", None]),
+)
+def test_spec_for_divisibility(vocab_dim, axis):
+    """A dim shards iff it divides the axis size; never crashes."""
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    spec = spec_for(("vocab",), (vocab_dim,), mesh, {"vocab": axis})
+    if axis is None or vocab_dim % 16 != 0:
+        assert spec[0] is None
+    else:
+        assert spec[0] == axis
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=40))
+def test_bucketed_scheduler_conserves_requests(lengths):
+    sched = BucketedScheduler(buckets=(128, 512, 1024, 2048, 4096), max_batch=4)
+    for i, ln in enumerate(lengths):
+        sched.submit(Request(rid=i, prompt_len=ln))
+    seen = set()
+    while sched.pending():
+        bucket, batch = sched.next_batch()
+        for r in batch:
+            assert r.prompt_len <= bucket or bucket == 4096
+            assert r.rid not in seen
+            seen.add(r.rid)
+    assert seen == set(range(len(lengths)))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 100000))
+def test_bucket_of_monotonic(n):
+    buckets = (128, 512, 1024)
+    b = bucket_of(n, buckets)
+    assert b in buckets
+    if n <= 128:
+        assert b == 128
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-100, 100), min_size=4, max_size=64))
+def test_int8_quantization_error_bound(vals):
+    g = jnp.array(vals, jnp.float32)
+    q, scale = _quantize_int8(g)
+    recon = _dequantize_int8(q, scale)
+    # error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(recon - g))) <= float(scale) * 0.5 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 5))
+def test_topk_error_feedback_telescopes(seed):
+    """Sum of (transmitted + residual) equals the true gradient sum: error
+    feedback loses nothing over time."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (64,))
+    e = jnp.zeros((64,))
+    total_sent = jnp.zeros((64,))
+    for step in range(5):
+        payload, e = compress_topk(g, e, k_frac=0.1)
+        total_sent = total_sent + decompress_topk(payload, (64,))
+    # after n steps: sent + residual == n * g
+    np.testing.assert_allclose(total_sent + e, 5 * g, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from([32, 64, 96, 128]), st.integers(16, 154))
+def test_similarity_memory_formula_quadratic_in_area(hw, text):
+    m1 = analytical.similarity_matrix_bytes(hw, hw, text)
+    m2 = analytical.similarity_matrix_bytes(2 * hw, 2 * hw, text)
+    # leading term is (hw^2)^2 -> 16x when the side doubles
+    assert m2 / m1 > 8.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 5), st.integers(1, 3))
+def test_unet_seq_profile_symmetric_u_shape(levels, blocks):
+    prof = analytical.unet_seq_profile(64, tuple([1] * levels), blocks,
+                                       tuple(range(levels)))
+    assert min(prof) == prof[len(prof) // 2] or min(prof) in prof
+    assert prof[0] == 64 * 64 and prof[-1] == 64 * 64

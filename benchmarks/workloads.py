@@ -2,124 +2,26 @@
 
 ``suite_events(name, impl)`` returns the full-size model's operator event
 stream for its paper-representative inference workload, traced abstractly
-(eval_shape) in bf16 — the production inference dtype.
+(eval_shape) in bf16 — the production inference dtype.  All modality
+dispatch happens in the workload registry: each
+:class:`repro.workload.GenerativeWorkload` owns its trace recipe.
 """
 
 from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 
-import repro.configs.suite as suite_mod  # registers the suite
+import repro.configs.suite as suite_mod  # noqa: F401 — registers the suite
 from repro.configs import get_config
-from repro.configs.base import LMConfig
-from repro.configs.suite import build_suite_model, with_dtype
-from repro.core import characterize, tracer
-from repro.models.transformer import TransformerLM
-
-TEXT_BATCH = 1  # the paper profiles single-request inference
+from repro.configs.suite import with_dtype
+from repro.core import characterize
+from repro.workload import workload_for
 
 
 @functools.lru_cache(maxsize=64)
 def suite_events(name: str, impl: str) -> tuple:
     """Returns the traced OpEvent list (cached; tuples for hashability)."""
     cfg = with_dtype(get_config(name), jnp.bfloat16)
-    key = jax.random.PRNGKey(0)
-
-    if isinstance(cfg, LMConfig):  # llama2-7b: prefill 2k + 64 decode steps
-        model = TransformerLM(cfg)
-        params = characterize.abstract_params(model)
-        S, NEW = 2048, 64
-        toks = jax.ShapeDtypeStruct((TEXT_BATCH, S), jnp.int32)
-        ev = characterize.trace_workload(
-            lambda p, t: model.prefill(p, t, impl=impl, max_len=S + NEW),
-            params, toks)
-        # decode steps at a few representative cache lengths, scaled
-        sample_points = 4
-        for i in range(sample_points):
-            cur = S + i * (NEW // sample_points)
-            caches = jax.eval_shape(lambda: model.init_cache(TEXT_BATCH, cur + 1))
-            tok1 = jax.ShapeDtypeStruct((TEXT_BATCH, 1), jnp.int32)
-            step_ev = characterize.trace_workload(
-                lambda p, t, c: model.decode_step(p, t, c, jnp.int32(cur),
-                                                  impl=impl),
-                params, tok1, caches)
-            ev += tracer.scale_events(step_ev, NEW // sample_points)
-        return tuple(ev)
-
-    model = build_suite_model(cfg)
-    params = characterize.abstract_params(model)
-    toks = jax.ShapeDtypeStruct((TEXT_BATCH, cfg.text.max_len), jnp.int32)
-
-    if cfg.family in ("diffusion", "ttv_diffusion"):
-        ev = characterize.trace_workload(
-            lambda p, t: model.sample(p, t, key, impl=impl), params, toks)
-        return tuple(ev)
-
-    if cfg.family == "transformer_tti":
-        if cfg.decode == "parallel":
-            ev = characterize.trace_workload(
-                lambda p, t: model.sample(p, t, key, impl=impl), params, toks)
-            return tuple(ev)
-        # Parti AR: text enc + vq once, plus decode steps at sampled cache
-        # lengths scaled to the full token count (Fig. 7 linear growth).
-        ev = characterize.trace_workload(
-            lambda p, t: model.text_encoder(p["text"], t, impl=impl),
-            params, toks)
-        S = cfg.image_tokens
-        sample_points = 8
-        lm_cfg = cfg.lm_config()
-        from repro.models.transformer import Block
-        from repro.models.layers.attention import AttentionCache
-
-        for i in range(sample_points):
-            cur = max(1, (i * S) // sample_points)
-            step_ev = _parti_step_events(model, params, cfg, cur, impl)
-            ev += tracer.scale_events(step_ev, S // sample_points)
-        return tuple(ev)
-
-    if cfg.family == "ttv_transformer":  # phenaki
-        ev = characterize.trace_workload(
-            lambda p, t: model.sample(p, t, key, impl=impl), params, toks)
-        return tuple(ev)
-    raise ValueError(cfg.family)
-
-
-def _parti_step_events(model, params_abs, cfg, cur: int, impl: str):
-    """One AR decode step against a cache of length ``cur`` (abstract)."""
-    import jax
-
-    from repro.models.layers.attention import AttentionCache
-
-    B = TEXT_BATCH
-
-    def step(params, tok, caches, ctx):
-        x = model._embed()(params["embed"], tok)
-        x = x + params["pos"][cur - 1: cur].astype(x.dtype)[None]
-        for i in range(cfg.n_layers):
-            cc = AttentionCache(
-                k=model.block._cross_attn()._split_heads(
-                    model.block._cross_attn()._wk()(
-                        params[f"layer{i}"]["cross_attn"]["wk"], ctx),
-                    cfg.n_heads),
-                v=model.block._cross_attn()._split_heads(
-                    model.block._cross_attn()._wv()(
-                        params[f"layer{i}"]["cross_attn"]["wv"], ctx),
-                    cfg.n_heads),
-            )
-            x, _ = model.block.decode(
-                params[f"layer{i}"], x, caches[i], jnp.int32(cur - 1),
-                cross_cache=cc)
-        x = model._final_ln()(params["final_ln"], x)
-        return model._head()(params["head"], x)
-
-    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-    ctx = jax.ShapeDtypeStruct((B, cfg.text.max_len, cfg.d_model), cfg.dtype)
-    caches = [
-        {"attn": jax.eval_shape(
-            lambda: model.block._attn().init_cache(B, cur, dtype=cfg.dtype))}
-        for _ in range(cfg.n_layers)
-    ]
-    return characterize.trace_workload(step, params_abs, tok, caches, ctx)
+    return tuple(characterize.trace_generative(workload_for(cfg), impl=impl))

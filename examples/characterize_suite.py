@@ -9,14 +9,19 @@ import sys
 sys.path.insert(0, ".")
 
 from benchmarks.workloads import suite_events  # noqa: E402
+from repro.configs import get_config  # noqa: E402
 from repro.configs.suite import SUITE  # noqa: E402
 from repro.core import amdahl, perf_model, prefill_decode, seq_profile  # noqa: E402
+from repro.workload import workload_for  # noqa: E402
 
 
 def main():
-    print(f"{'model':18s} {'regime':13s} {'attn% base':>10s} {'attn% FA':>9s} "
-          f"{'FA e2e':>7s} {'seq var':>8s}")
+    print(f"{'model':18s} {'route':5s} {'regime':13s} {'attn% base':>10s} "
+          f"{'attn% FA':>9s} {'FA e2e':>7s} {'seq var':>8s}")
     for name in SUITE:
+        # suite_events routes through workload_for(cfg).trace_events —
+        # one characterization recipe per GenerativeWorkload
+        route = workload_for(get_config(name)).route
         base = list(suite_events(name, "naive"))
         flash = list(suite_events(name, "blocked_jax"))
         fb = perf_model.breakdown_fraction(base)
@@ -25,7 +30,8 @@ def main():
         rep = amdahl.flash_speedup(base, flash)
         regime = prefill_decode.classify(base)["regime"]
         prof = seq_profile.profile(base)
-        print(f"{name:18s} {regime:13s} {fb.get('attention', 0):>9.1%} "
+        print(f"{name:18s} {route:5s} {regime:13s} "
+              f"{fb.get('attention', 0):>9.1%} "
               f"{ff_abs.get('attention', 0) / t_base:>8.1%} "
               f"{rep.e2e_speedup:>6.2f}x {prof.variation:>7.1f}x")
 

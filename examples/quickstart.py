@@ -1,6 +1,6 @@
-"""Quickstart: build a small Stable-Diffusion-style pipeline, generate an
-image from a text prompt, and print the paper-style characterization of the
-full-size model — all on CPU in under a minute.
+"""Quickstart: resolve a suite model through the unified GenerativeWorkload
+API, generate an image from a text prompt, and print the paper-style
+characterization of the full-size model — all on CPU in under a minute.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,31 +10,28 @@ import jax.numpy as jnp
 
 import repro.configs.suite  # noqa: F401 — registers the paper suite
 from repro.configs import get_config
-from repro.configs.suite import build_suite_model, reduced_suite_config, with_dtype
+from repro.configs.suite import with_dtype
 from repro.core import amdahl, characterize, perf_model, seq_profile
+from repro.workload import reduced_workload, workload_for
 
 
 def main():
     key = jax.random.PRNGKey(0)
 
-    # --- 1. run a reduced latent-diffusion pipeline end to end -------------
-    cfg = reduced_suite_config(get_config("stable-diffusion"))
-    model = build_suite_model(cfg)
-    params = model.init(key)
+    # --- 1. run a reduced latent-diffusion workload end to end -------------
+    # workload_for() resolves ANY suite config (LM, diffusion, AR-image,
+    # TTV) to one init/generate interface; swap the arch name freely.
+    workload = reduced_workload(get_config("stable-diffusion"))
+    params = workload.init(key)
     prompt_tokens = jax.random.randint(key, (1, 8), 0, 100)
-    image = model.sample(params, prompt_tokens, key)
+    image = workload.generate(params, prompt_tokens, key)
     print(f"[1] sampled image {image.shape} "
           f"(finite={bool(jnp.all(jnp.isfinite(image)))})")
 
     # --- 2. characterize the FULL-SIZE model abstractly --------------------
-    full = with_dtype(get_config("stable-diffusion"), jnp.bfloat16)
-    m = build_suite_model(full)
-    p_abs = characterize.abstract_params(m)
-    toks = jax.ShapeDtypeStruct((1, 77), jnp.int32)
-    base = characterize.trace_workload(
-        lambda p, t: m.sample(p, t, key, impl="naive"), p_abs, toks)
-    flash = characterize.trace_workload(
-        lambda p, t: m.sample(p, t, key, impl="blocked_jax"), p_abs, toks)
+    full = workload_for(with_dtype(get_config("stable-diffusion"), jnp.bfloat16))
+    base = characterize.trace_generative(full, impl="naive")
+    flash = characterize.trace_generative(full, impl="blocked_jax")
 
     fb = perf_model.breakdown_fraction(base)
     ff = perf_model.breakdown_fraction(flash)
@@ -53,6 +50,11 @@ def main():
     period = seq_profile.fundamental_period(prof.seq_lens)
     print(f"[4] sequence-length U-shape over one UNet pass — paper Fig. 7:")
     print(f"    {period}")
+
+    # --- 3. the scheduler-facing cost view ---------------------------------
+    cd = full.cost_descriptor()
+    print(f"[5] cost descriptor ({cd.route} route): "
+          + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
-"""Serve a small LM with batched requests through the bucketed scheduler
-(paper §V-B: sequence-length-bucketed batching).
+"""Serve a small LM with batched requests through the unified ServeEngine
+(paper §V-B: sequence-length-bucketed batching).  The same engine serves the
+TTI/TTV suite — try ``python -m repro.launch.serve --arch stable-diffusion
+--reduced`` for the denoise-pod route.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -9,24 +11,23 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.models.transformer import TransformerLM
-from repro.serving.engine import LMServeEngine, ServeConfig
+from repro.configs import get_config
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.workload import reduced_workload
 
 
 def main():
-    cfg = reduced(get_config("olmo-1b"))
-    model = TransformerLM(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    engine = LMServeEngine(cfg, params,
-                           ServeConfig(max_batch=4, buckets=(16, 32, 64)))
+    workload = reduced_workload(get_config("olmo-1b"))
+    params = workload.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(workload, params,
+                         ServeConfig(max_batch=4, buckets=(16, 32, 64)))
 
     rng = np.random.default_rng(0)
     n_requests = 10
     t0 = time.perf_counter()
     for rid in range(n_requests):
         plen = int(rng.integers(4, 60))
-        engine.submit(rid, rng.integers(0, cfg.vocab, size=plen), 12)
+        engine.submit(rid, rng.integers(0, workload.prompt_vocab, size=plen), 12)
     results = engine.run()
     dt = time.perf_counter() - t0
 
@@ -34,6 +35,8 @@ def main():
           f"({engine.stats['tokens'] / max(dt, 1e-9):.0f} tok/s aggregate)")
     print(f"prefill {engine.stats['prefill_s']:.2f}s / "
           f"decode {engine.stats['decode_s']:.2f}s")
+    print(f"padding waste per batch: "
+          f"{[round(w, 3) for w in engine.stats['padding_waste']]}")
     for rid in sorted(results)[:3]:
         print(f"  req {rid}: tokens {results[rid][:6]}...")
 

@@ -12,7 +12,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.configs.base import EncoderSpec, LMConfig, register
+from repro.configs.base import LMConfig, register
 from repro.models.diffusion import DiffusionConfig, SRStage
 from repro.models.text_encoder import TextEncoderConfig
 from repro.models.unet import UNetConfig
@@ -232,69 +232,13 @@ SUITE = [
 
 
 def reduced_suite_config(cfg):
-    """Tiny same-structure suite config for CPU execution/benchmarks."""
-    small_text = TextEncoderConfig(vocab=512, max_len=16, n_layers=2,
-                                   d_model=64, n_heads=4, d_ff=128)
-    if isinstance(cfg, DiffusionConfig):
-        small_unet = dataclasses.replace(
-            cfg.unet, model_channels=32,
-            channel_mult=cfg.unet.channel_mult[:3] or (1, 2),
-            num_res_blocks=1, attn_levels=(0, 1), context_dim=64,
-            head_channels=8, groups=8,
-        )
-        sr = tuple(
-            SRStage(
-                out_size=cfg.image_size // 2 * 4,
-                unet=dataclasses.replace(
-                    s.unet, model_channels=16, channel_mult=(1, 2),
-                    num_res_blocks=1, attn_levels=(), context_dim=64, groups=8,
-                ),
-                steps=2,
-            )
-            for s in cfg.sr_stages[:1]
-        )
-        vae = None
-        if cfg.vae is not None:
-            vae = dataclasses.replace(cfg.vae, base_channels=16,
-                                      channel_mult=(1, 2), num_res_blocks=1,
-                                      groups=8)
-        return dataclasses.replace(
-            cfg, name=cfg.name + "-reduced",
-            image_size=32 if cfg.kind == "latent" else 16,
-            latent_down=8 if cfg.kind == "latent" else 1,
-            unet=small_unet, text=small_text, vae=vae, sr_stages=sr,
-            denoise_steps=3,
-        )
-    if isinstance(cfg, ARImageConfig):
-        return dataclasses.replace(
-            cfg, name=cfg.name + "-reduced", n_layers=2, d_model=64, n_heads=4,
-            d_ff=128, image_vocab=128, image_tokens=16, parallel_steps=3,
-            text=small_text,
-            vq=VQDecoderConfig(
-                codebook_size=128, token_hw=4, embed_dim=32,
-                decoder=DecoderConfig(latent_channels=32, base_channels=16,
-                                      channel_mult=(1, 2), num_res_blocks=1,
-                                      groups=8),
-            ),
-        )
-    if isinstance(cfg, TTVConfig):
-        return dataclasses.replace(
-            cfg, name=cfg.name + "-reduced",
-            unet=dataclasses.replace(
-                cfg.unet, model_channels=32, channel_mult=(1, 2),
-                num_res_blocks=1, attn_levels=(0,), context_dim=64,
-                head_channels=8, groups=8,
-            ),
-            text=small_text, frames=4, image_size=16, denoise_steps=2,
-            temporal_head_channels=8,
-        )
-    if isinstance(cfg, PhenakiConfig):
-        return dataclasses.replace(
-            cfg, name=cfg.name + "-reduced", n_layers=2, d_model=64, n_heads=4,
-            d_ff=128, video_vocab=128, frames=3, tokens_per_frame=16,
-            parallel_steps=3, text=small_text,
-        )
-    raise TypeError(type(cfg))
+    """Tiny same-structure suite config for CPU execution/benchmarks.
+
+    Thin wrapper over the workload registry — the per-modality reduction
+    rules live with each :class:`repro.workload.GenerativeWorkload`."""
+    from repro.workload import reduced_config
+
+    return reduced_config(cfg)
 
 
 def with_dtype(cfg, dtype):
@@ -317,20 +261,7 @@ def with_dtype(cfg, dtype):
 
 
 def build_suite_model(cfg):
-    """Config -> model instance."""
-    from repro.models.ar_image import ARImageModel
-    from repro.models.diffusion import DiffusionPipeline
-    from repro.models.transformer import TransformerLM
-    from repro.models.ttv import MakeAVideoPipeline, PhenakiModel
+    """Config -> model instance (via the workload registry)."""
+    from repro.workload import build_model
 
-    if isinstance(cfg, LMConfig):
-        return TransformerLM(cfg)
-    if isinstance(cfg, DiffusionConfig):
-        return DiffusionPipeline(cfg)
-    if isinstance(cfg, ARImageConfig):
-        return ARImageModel(cfg)
-    if isinstance(cfg, TTVConfig):
-        return MakeAVideoPipeline(cfg)
-    if isinstance(cfg, PhenakiConfig):
-        return PhenakiModel(cfg)
-    raise TypeError(type(cfg))
+    return build_model(cfg)

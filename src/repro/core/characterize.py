@@ -33,3 +33,10 @@ def trace_concrete(fn: Callable, *args, **kwargs) -> list[OpEvent]:
     with tracer.trace() as tr:
         fn(*args, **kwargs)
     return tr.events
+
+
+def trace_generative(workload, impl: str = "auto") -> list[OpEvent]:
+    """Trace a :class:`repro.workload.GenerativeWorkload`'s representative
+    inference workload (its ``trace_events`` recipe: full pipeline for
+    single-pass generators, prefill + sampled decode steps for AR ones)."""
+    return list(workload.trace_events(impl=impl))

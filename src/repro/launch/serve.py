@@ -1,7 +1,12 @@
-"""Serving entry point: batched LM serving with the bucketed scheduler.
+"""Serving entry point: any registered arch through the unified ServeEngine.
+
+LM archs serve through the bucketed prefill+decode path; diffusion / AR-image
+/ TTV archs through the staggered denoise-pod path — one engine API for all.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --requests 12
+    PYTHONPATH=src python -m repro.launch.serve --arch stable-diffusion \
+        --reduced --requests 4
 """
 
 from __future__ import annotations
@@ -12,40 +17,63 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.models.transformer import TransformerLM
-from repro.serving.engine import LMServeEngine, ServeConfig
+import repro.configs.suite  # noqa: F401 — registers the paper suite
+from repro.configs import get_config, list_configs
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.workload import reduced_workload, workload_for
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--arch", default="olmo-1b", choices=list_configs())
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pod-size", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    model = TransformerLM(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    workload = (reduced_workload(cfg) if args.reduced else workload_for(cfg))
+    cfg = workload.cfg
+    params = workload.init(jax.random.PRNGKey(0))
 
-    engine = LMServeEngine(cfg, params, ServeConfig())
+    engine = ServeEngine(workload, params,
+                         ServeConfig(pod_size=args.pod_size))
+    cd = workload.cost_descriptor()
+    print(f"arch {cfg.name} | route {workload.route} | stages "
+          + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
+
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for rid in range(args.requests):
-        plen = int(rng.integers(4, 30))
-        prompt = rng.integers(0, cfg.vocab, size=plen)
+        plen = int(rng.integers(4, min(workload.max_prompt_len, 30) + 1))
+        prompt = rng.integers(0, workload.prompt_vocab, size=plen)
         engine.submit(rid, prompt, args.max_new)
     results = engine.run()
     dt = time.perf_counter() - t0
-    print(f"served {len(results)} requests in {dt:.2f}s | "
-          f"prefill {engine.stats['prefill_s']:.2f}s "
-          f"decode {engine.stats['decode_s']:.2f}s "
-          f"tokens {engine.stats['tokens']}")
-    for rid in sorted(results)[:3]:
-        print(f"  req {rid}: {results[rid][:8]}...")
+
+    s = engine.stats
+    print(f"served {len(results)} requests in {dt:.2f}s")
+    if workload.route == "lm":
+        waste = s["padding_waste"]
+        print(f"  prefill {s['prefill_s']:.2f}s decode {s['decode_s']:.2f}s "
+              f"tokens {s['tokens']}")
+        print(f"  padding_waste per batch: "
+              f"{[round(w, 3) for w in waste]} "
+              f"(mean {np.mean(waste):.1%})" if waste else
+              "  padding_waste: no batches served")
+        for rid in sorted(results)[:3]:
+            print(f"  req {rid}: {results[rid][:8]}...")
+    else:
+        print(f"  generate {s['generate_s']:.2f}s over {s['pods']} pod(s)")
+        if s["bandwidth_profile"]:
+            prof = s["bandwidth_profile"][-1]
+            print(f"  stagger bandwidth profile: aligned peak "
+                  f"{prof['aligned_peak']:.0f} -> staggered "
+                  f"{prof['staggered_peak']:.0f} "
+                  f"({prof['peak_reduction']:.2f}x peak reduction)")
+        for rid in sorted(results)[:3]:
+            print(f"  req {rid}: output shape {results[rid].shape}")
 
 
 if __name__ == "__main__":

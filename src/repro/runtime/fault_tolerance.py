@@ -59,9 +59,11 @@ class FaultTolerantRunner:
         """Run to total_steps with restart/retry semantics.  Returns state."""
         cfg = self.cfg
         start = 0
-        if self.ckpt.latest_step() is not None:
-            state = self.ckpt.restore(state, shardings=state_shardings)
-            start = int(self.ckpt.latest_step())
+        last = self.ckpt.latest_step()
+        if last is not None:
+            state = self.ckpt.restore(state, step=last,
+                                      shardings=state_shardings)
+            start = int(last)
         step = start
         retries = 0
         while step < cfg.total_steps:
@@ -75,10 +77,18 @@ class FaultTolerantRunner:
                     self.ckpt.save(step, state)
                     self.ckpt.wait()
                     raise
-                # restore last good checkpoint and retry
-                if self.ckpt.latest_step() is not None:
-                    state = self.ckpt.restore(state, shardings=state_shardings)
-                    step = int(self.ckpt.latest_step())
+                # Restore the last good checkpoint and retry.  Wait for any
+                # in-flight async save first, then pin state and step to the
+                # SAME checkpoint — picking the step via a second
+                # latest_step() call raced the background writer (a save
+                # could publish between restore and the step query, resuming
+                # a newer step with older state and silently losing steps).
+                self.ckpt.wait()
+                last = self.ckpt.latest_step()
+                if last is not None:
+                    state = self.ckpt.restore(state, step=last,
+                                              shardings=state_shardings)
+                    step = int(last)
                 continue
             step += 1
             if on_step is not None:

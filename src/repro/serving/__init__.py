@@ -3,11 +3,13 @@ from repro.serving.scheduler import (
     DenoisePodScheduler,
     Request,
 )
-from repro.serving.engine import LMServeEngine
+from repro.serving.engine import LMServeEngine, ServeConfig, ServeEngine
 
 __all__ = [
     "BucketedScheduler",
     "DenoisePodScheduler",
     "Request",
     "LMServeEngine",
+    "ServeConfig",
+    "ServeEngine",
 ]

@@ -1,8 +1,18 @@
-"""Batched LM serving engine: prefill + decode loop over a KV cache.
+"""Modality-agnostic serving engine over the GenerativeWorkload API.
 
-The Table III "Decode" regime as a running system: requests are admitted
-through the bucketed scheduler, prefilled as a batch, then decoded step by
-step with a shared jitted decode function (one compiled shape per bucket).
+One ``submit/step/run`` surface for every suite model:
+
+  * **LM route** (Table III Prefill/Decode): requests are admitted through
+    the bucketed scheduler, prefilled as a batch, then decoded step by step
+    with a shared jitted decode function (one compiled shape per bucket).
+    Per-batch ``padding_waste`` — the §V-B bucket-quantum trade — lands in
+    ``stats``.
+  * **Pod route** (diffusion / AR-image / TTV): requests accumulate into
+    denoise pods; each pod runs the full generation pipeline as one batch
+    while ``DenoisePodScheduler`` staggers the pod's step indices (paper
+    §V-A) — the resulting ``bandwidth_profile`` (aligned vs staggered HBM
+    peak) is reported in ``stats``.
+
 Runs the reduced configs on CPU (tests/examples) and the full configs on the
 production mesh via the same code path.
 """
@@ -15,10 +25,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import LMConfig
-from repro.models.transformer import TransformerLM
-from repro.serving.scheduler import BucketedScheduler, Request
+from repro.serving.scheduler import (
+    BucketedScheduler,
+    DenoisePodScheduler,
+    Request,
+)
+from repro.workload import GenerativeWorkload, workload_for
 
 
 @dataclasses.dataclass
@@ -27,38 +41,80 @@ class ServeConfig:
     max_len: int = 256
     buckets: tuple = (32, 64, 128)
     temperature: float = 0.0  # 0 = greedy
+    pod_size: int = 0  # 0 -> max_batch
+    seed: int = 0
+
+    @property
+    def resolved_pod_size(self) -> int:
+        return self.pod_size or self.max_batch
 
 
-class LMServeEngine:
-    def __init__(self, cfg: LMConfig, params, serve_cfg: ServeConfig = ServeConfig()):
-        self.cfg = cfg
-        self.model = TransformerLM(cfg)
+class ServeEngine:
+    """Serves any registered GenerativeWorkload behind submit/step/run."""
+
+    def __init__(self, workload, params, serve_cfg: ServeConfig = ServeConfig()):
+        if not isinstance(workload, GenerativeWorkload):
+            workload = workload_for(workload)  # accept a raw config too
+        self.workload = workload
+        self.cfg = workload.cfg
+        self.model = workload.model
         self.params = params
         self.serve_cfg = serve_cfg
-        self.scheduler = BucketedScheduler(serve_cfg.buckets, serve_cfg.max_batch)
-        self._decode_jit = jax.jit(
-            lambda p, tok, caches, cur: self.model.decode_step(p, tok, caches, cur)
-        )
-        self.stats: dict = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+        self.cost = workload.cost_descriptor()
+        self.stats: dict = {"requests": 0}
 
-    def submit(self, rid: int, prompt_tokens, max_new_tokens: int) -> None:
+        if workload.route == "lm":
+            self.scheduler = BucketedScheduler(serve_cfg.buckets,
+                                               serve_cfg.max_batch)
+            self._decode_jit = jax.jit(
+                lambda p, tok, caches, cur: self.model.decode_step(
+                    p, tok, caches, cur)
+            )
+            self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
+                              padding_waste=[])
+        else:
+            self.scheduler = DenoisePodScheduler(
+                pod_size=serve_cfg.resolved_pod_size,
+                total_steps=self.cost.iterative_steps(),
+            )
+            self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[])
+        self._pod_index = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, rid: int, tokens, max_new_tokens: int = 0) -> None:
+        """Admit one request: ``tokens`` are the prompt/conditioning ids."""
+        req = self.workload.prepare_request(rid, tokens,
+                                            max_new_tokens=max_new_tokens)
+        if self.workload.route == "lm":
+            limit = max(self.serve_cfg.buckets)
+            if req.prompt_len > limit:
+                raise ValueError(
+                    f"request {rid}: prompt length {req.prompt_len} exceeds "
+                    f"the largest configured bucket ({limit}); raise "
+                    f"ServeConfig.buckets or truncate the prompt")
         self.scheduler.submit(
-            Request(rid=rid, prompt_len=len(prompt_tokens),
-                    max_new_tokens=max_new_tokens,
-                    state={"prompt": jnp.asarray(prompt_tokens, jnp.int32)})
+            Request(rid=req.rid, prompt_len=req.prompt_len,
+                    max_new_tokens=req.max_new_tokens,
+                    denoise_steps=req.denoise_steps,
+                    state={"prompt": jnp.asarray(req.tokens, jnp.int32)})
         )
+        self.stats["requests"] += 1
 
-    def _pad_prompts(self, batch, bucket: int):
-        toks = jnp.zeros((len(batch), bucket), jnp.int32)
+    # -- LM route ------------------------------------------------------------
+
+    def _pad_prompts(self, batch, width: int):
+        toks = jnp.zeros((len(batch), width), jnp.int32)
         for i, r in enumerate(batch):
             toks = toks.at[i, : r.prompt_len].set(r.state["prompt"])
         return toks
 
-    def step(self) -> list[tuple[int, list]]:
-        """Serve one scheduled batch to completion; returns (rid, tokens)."""
+    def _step_lm(self) -> list[tuple[int, Any]]:
         bucket, batch = self.scheduler.next_batch()
         if not batch:
             return []
+        self.stats["padding_waste"].append(
+            self.scheduler.padding_waste(batch, bucket))
         toks = self._pad_prompts(batch, bucket)
         max_new = max(r.max_new_tokens for r in batch)
         cap = bucket + max_new
@@ -74,7 +130,7 @@ class LMServeEngine:
         cur = jnp.int32(bucket)
         next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         t0 = time.perf_counter()
-        for step in range(max_new):
+        for _ in range(max_new):
             for i in range(len(batch)):
                 out[i].append(int(next_tok[i, 0]))
             logits, caches = self._decode_jit(self.params, next_tok, caches, cur)
@@ -84,9 +140,46 @@ class LMServeEngine:
         self.stats["tokens"] += max_new * len(batch)
         return [(r.rid, out[i][: r.max_new_tokens]) for i, r in enumerate(batch)]
 
+    # -- pod route -----------------------------------------------------------
+
+    def _step_pod(self) -> list[tuple[int, Any]]:
+        pod = self.scheduler.next_pod()
+        if not pod:
+            return []
+        # staggered step indices for the pod (paper §V-A) + the resulting
+        # instantaneous-HBM-demand flattening vs the aligned baseline
+        schedule = self.scheduler.schedule(pod)
+        profile = DenoisePodScheduler.bandwidth_profile(
+            self.cost.step_demands(), schedule)
+        self.stats["bandwidth_profile"].append(profile)
+
+        width = max(r.prompt_len for r in pod)
+        toks = self._pad_prompts(pod, width)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.serve_cfg.seed), self._pod_index)
+        self._pod_index += 1
+        t0 = time.perf_counter()
+        out = self.workload.generate(self.params, toks, key)
+        out = jax.block_until_ready(out)
+        self.stats["generate_s"] += time.perf_counter() - t0
+        self.stats["pods"] += 1
+        return [(r.rid, np.asarray(out[i])) for i, r in enumerate(pod)]
+
+    # -- unified loop --------------------------------------------------------
+
+    def step(self) -> list[tuple[int, Any]]:
+        """Serve one scheduled batch/pod to completion; returns (rid, out)."""
+        if self.workload.route == "lm":
+            return self._step_lm()
+        return self._step_pod()
+
     def run(self) -> dict:
         results = {}
         while self.scheduler.pending():
-            for rid, toks in self.step():
-                results[rid] = toks
+            for rid, out in self.step():
+                results[rid] = out
         return results
+
+
+class LMServeEngine(ServeEngine):
+    """Back-compat name for the LM-route engine (pre-unification API)."""

@@ -103,6 +103,16 @@ class DenoisePodScheduler:
             self.pods.append(self._open)
             self._open = []
 
+    def pending(self) -> int:
+        return sum(len(p) for p in self.pods) + len(self._open)
+
+    def next_pod(self) -> list:
+        """Pop the next pod to serve (flushing a partial pod if that is all
+        that remains)."""
+        if not self.pods:
+            self.flush()
+        return self.pods.pop(0) if self.pods else []
+
     def schedule(self, pod: list) -> list[list[int]]:
         """Per-tick denoise-step indices, staggered."""
         k = max(1, self.total_steps // max(len(pod), 1))

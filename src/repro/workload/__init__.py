@@ -1,0 +1,48 @@
+"""Unified generative-workload API over the eight-model suite.
+
+Importing this package registers every suite workload; ``workload_for(cfg)``
+resolves any registered config (LM, diffusion, AR-image, TTV) to its
+:class:`GenerativeWorkload`.
+"""
+
+from repro.workload.base import (
+    CostDescriptor,
+    GenRequest,
+    GenerativeWorkload,
+    Stage,
+    build_model,
+    reduced_config,
+    reduced_workload,
+    register_workload,
+    workload_for,
+    workload_types,
+)
+
+# import side-effect: register the suite workloads
+from repro.workload import lm  # noqa: F401
+from repro.workload import diffusion  # noqa: F401
+from repro.workload import ar_image  # noqa: F401
+from repro.workload import ttv  # noqa: F401
+
+from repro.workload.lm import LMWorkload
+from repro.workload.diffusion import DiffusionWorkload
+from repro.workload.ar_image import ARImageWorkload
+from repro.workload.ttv import MakeAVideoWorkload, PhenakiWorkload
+
+__all__ = [
+    "CostDescriptor",
+    "GenRequest",
+    "GenerativeWorkload",
+    "Stage",
+    "build_model",
+    "reduced_config",
+    "reduced_workload",
+    "register_workload",
+    "workload_for",
+    "workload_types",
+    "LMWorkload",
+    "DiffusionWorkload",
+    "ARImageWorkload",
+    "MakeAVideoWorkload",
+    "PhenakiWorkload",
+]

@@ -1,0 +1,229 @@
+"""The ``GenerativeWorkload`` protocol + config-keyed workload registry.
+
+The paper's core systems argument is that TTI/TTV generation must be served
+as a first-class workload, not an LLM afterthought.  Concretely that means
+one API over the whole eight-model suite: a serving engine, the abstract
+characterizer, and every benchmark should be written once against
+
+  * ``init(key)``                 — materialize parameters
+  * ``prepare_request(...)``      — modality-specific inputs -> ``GenRequest``
+  * ``generate(params, tokens, key)`` — the full inference pipeline
+  * ``trace_inputs()`` / ``trace_events(impl)`` — abstract characterization
+  * ``cost_descriptor()``         — the stage/step structure (denoise steps,
+    decode steps, SR stages) that schedulers consume
+
+instead of five bespoke ``sample``/``prefill`` signatures dispatched through
+``isinstance`` chains.  Dispatch is a registry keyed by *config type*,
+mirroring the ``--arch`` name registry in ``repro.configs.base``: each
+workload class declares ``@register_workload(SomeConfig)`` and
+``workload_for(cfg)`` resolves through the config's MRO.  Adding a ninth
+model is one new config class + one decorated workload class — no existing
+call site changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Uniform request / cost views
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request, uniform across modalities.
+
+    ``tokens`` is always the conditioning text/prompt token ids (1-D);
+    modality-specific knobs (decode budget, denoise steps) ride along so a
+    scheduler never needs to know which model family it is batching."""
+
+    rid: int
+    modality: str  # "text" | "image" | "video"
+    route: str  # "lm" | "pod"
+    tokens: Any  # (S,) int32 prompt / text-conditioning ids
+    max_new_tokens: int = 0  # LM decode budget
+    denoise_steps: int = 0  # iterative-refinement step count (pod route)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.shape(self.tokens)[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage of a generative workload.
+
+    ``steps`` is how many times the stage's graph executes (denoise steps,
+    unmasking steps, AR decode steps); ``seq_len`` a representative attention
+    sequence length; ``demand`` an optional per-tick relative HBM-demand
+    profile inside the stage (the Fig. 7 U-shape for UNets, linear cache
+    growth for AR decode) that ``DenoisePodScheduler`` staggering consumes."""
+
+    name: str
+    steps: int
+    seq_len: int
+    demand: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CostDescriptor:
+    """Scheduler-facing cost structure of one workload (paper Table III)."""
+
+    arch: str
+    route: str  # "lm" | "pod"
+    stages: tuple  # tuple[Stage, ...]
+
+    def total_steps(self) -> int:
+        return sum(s.steps for s in self.stages)
+
+    def iterative_steps(self) -> int:
+        """Steps of the dominant iterative stage (what a pod staggers over)."""
+        return max((s.steps for s in self.stages), default=1)
+
+    def step_demands(self) -> list:
+        """Relative per-tick HBM demand across the iterative stages, for
+        ``DenoisePodScheduler.bandwidth_profile``.  Stages without an explicit
+        profile contribute their (flat) seq_len."""
+        out: list = []
+        for s in self.stages:
+            if s.steps <= 1 and not s.demand:
+                continue  # one-shot stages (text encoder, VAE) don't stagger
+            prof = list(s.demand) if s.demand else [s.seq_len]
+            reps = max(1, s.steps // max(len(prof), 1))
+            out += (prof * reps)[: max(s.steps, len(prof))]
+        return out or [1.0]
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+
+class GenerativeWorkload:
+    """Base class every suite workload implements.
+
+    Subclasses set ``route``/``modality``, implement ``build_model`` and the
+    modality-specific hooks; everything downstream (``ServeEngine``,
+    ``benchmarks.workloads``, the examples) talks only to this interface."""
+
+    route: str = "pod"  # "lm" (bucketed prefill+decode) | "pod" (denoise pod)
+    modality: str = "image"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.model = self.build_model(cfg)
+
+    # -- construction --------------------------------------------------------
+
+    def build_model(self, cfg):
+        raise NotImplementedError
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def reduced(self):
+        """Tiny same-structure config for CPU execution/benchmarks."""
+        raise NotImplementedError
+
+    # -- serving -------------------------------------------------------------
+
+    @property
+    def prompt_vocab(self) -> int:
+        """Vocab to draw conditioning prompt ids from."""
+        return self.cfg.text.vocab
+
+    @property
+    def max_prompt_len(self) -> int:
+        return self.cfg.text.max_len
+
+    def prepare_request(self, rid: int, tokens, *, max_new_tokens: int = 0,
+                        **meta) -> GenRequest:
+        cd = self.cost_descriptor()
+        return GenRequest(
+            rid=rid, modality=self.modality, route=self.route,
+            tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=max_new_tokens,
+            denoise_steps=cd.iterative_steps() if self.route == "pod" else 0,
+            meta=meta,
+        )
+
+    def generate(self, params, tokens, key, *, impl="auto"):
+        """Batched full-pipeline inference: (B, S) tokens -> output."""
+        return self.model.sample(params, tokens, key, impl=impl)
+
+    # -- characterization ----------------------------------------------------
+
+    def trace_inputs(self):
+        """Abstract (ShapeDtypeStruct) args for ``generate`` under tracing."""
+        import jax
+        import jax.numpy as jnp
+
+        return (jax.ShapeDtypeStruct((1, self.max_prompt_len), jnp.int32),)
+
+    def trace_events(self, impl: str = "auto") -> list:
+        """Full-workload operator event stream, traced abstractly."""
+        import jax
+
+        from repro.core import characterize
+
+        key = jax.random.PRNGKey(0)
+        params = characterize.abstract_params(self.model)
+        (toks,) = self.trace_inputs()
+        return characterize.trace_workload(
+            lambda p, t: self.generate(p, t, key, impl=impl), params, toks)
+
+    def cost_descriptor(self) -> CostDescriptor:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry (decorator-based, keyed by config type — mirrors --arch registry)
+# ---------------------------------------------------------------------------
+
+_WORKLOADS: dict[type, type] = {}
+
+
+def register_workload(*config_types) -> Callable:
+    """Class decorator: ``@register_workload(DiffusionConfig)``."""
+
+    def deco(cls):
+        for t in config_types:
+            _WORKLOADS[t] = cls
+        return cls
+
+    return deco
+
+
+def workload_types() -> dict:
+    return dict(_WORKLOADS)
+
+
+def workload_for(cfg) -> GenerativeWorkload:
+    """Config -> workload instance (single dispatch over the registry)."""
+    for t in type(cfg).__mro__:
+        if t in _WORKLOADS:
+            return _WORKLOADS[t](cfg)
+    raise TypeError(
+        f"no GenerativeWorkload registered for {type(cfg).__name__}; "
+        f"known: {sorted(t.__name__ for t in _WORKLOADS)}"
+    )
+
+
+def build_model(cfg):
+    """Config -> model instance (back-compat for build_suite_model)."""
+    return workload_for(cfg).model
+
+
+def reduced_config(cfg):
+    """Config -> tiny same-structure config, any modality."""
+    return workload_for(cfg).reduced()
+
+
+def reduced_workload(cfg) -> GenerativeWorkload:
+    """Config -> workload over its reduced config (the CPU test/demo path)."""
+    return workload_for(reduced_config(cfg))

@@ -1,0 +1,90 @@
+"""Diffusion TTI workloads (Stable Diffusion / Imagen / Prod-Image).
+
+Stage structure: text encoder -> base-UNet denoise loop -> (latent) VAE
+decode or (pixel) SR-UNet cascade.  The denoise stage carries the analytic
+Fig. 7 U-shape as its per-tick demand profile, which is what the
+``DenoisePodScheduler`` staggers to flatten instantaneous HBM demand
+(paper §V-A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import analytical
+from repro.models.diffusion import DiffusionConfig, DiffusionPipeline, SRStage
+from repro.models.text_encoder import TextEncoderConfig
+from repro.workload.base import (
+    CostDescriptor,
+    GenerativeWorkload,
+    Stage,
+    register_workload,
+)
+
+REDUCED_TEXT = TextEncoderConfig(vocab=512, max_len=16, n_layers=2,
+                                 d_model=64, n_heads=4, d_ff=128)
+
+
+def unet_demand(latent_hw: int, unet_cfg) -> tuple:
+    """Per-tick relative HBM demand over one UNet pass (Fig. 7 U-shape)."""
+    prof = analytical.unet_seq_profile(
+        latent_hw, unet_cfg.channel_mult, unet_cfg.num_res_blocks,
+        unet_cfg.attn_levels,
+    )
+    return tuple(prof) if prof else (latent_hw * latent_hw,)
+
+
+@register_workload(DiffusionConfig)
+class DiffusionWorkload(GenerativeWorkload):
+    route = "pod"
+    modality = "image"
+
+    def build_model(self, cfg: DiffusionConfig) -> DiffusionPipeline:
+        return DiffusionPipeline(cfg)
+
+    def reduced(self) -> DiffusionConfig:
+        cfg = self.cfg
+        small_unet = dataclasses.replace(
+            cfg.unet, model_channels=32,
+            channel_mult=cfg.unet.channel_mult[:3] or (1, 2),
+            num_res_blocks=1, attn_levels=(0, 1), context_dim=64,
+            head_channels=8, groups=8,
+        )
+        sr = tuple(
+            SRStage(
+                out_size=cfg.image_size // 2 * 4,
+                unet=dataclasses.replace(
+                    s.unet, model_channels=16, channel_mult=(1, 2),
+                    num_res_blocks=1, attn_levels=(), context_dim=64, groups=8,
+                ),
+                steps=2,
+            )
+            for s in cfg.sr_stages[:1]
+        )
+        vae = None
+        if cfg.vae is not None:
+            vae = dataclasses.replace(cfg.vae, base_channels=16,
+                                      channel_mult=(1, 2), num_res_blocks=1,
+                                      groups=8)
+        return dataclasses.replace(
+            cfg, name=cfg.name + "-reduced",
+            image_size=32 if cfg.kind == "latent" else 16,
+            latent_down=8 if cfg.kind == "latent" else 1,
+            unet=small_unet, text=REDUCED_TEXT, vae=vae, sr_stages=sr,
+            denoise_steps=3,
+        )
+
+    def cost_descriptor(self) -> CostDescriptor:
+        cfg = self.cfg
+        stages = [
+            Stage("text_encoder", 1, cfg.text.max_len),
+            Stage("denoise", cfg.denoise_steps, cfg.latent_size ** 2,
+                  demand=unet_demand(cfg.latent_size, cfg.unet)),
+        ]
+        for i, s in enumerate(cfg.sr_stages):
+            stages.append(Stage(f"sr{i}", s.steps, s.out_size ** 2,
+                                demand=unet_demand(s.out_size, s.unet)))
+        if cfg.vae is not None:
+            stages.append(Stage("vae", 1, cfg.image_size ** 2))
+        return CostDescriptor(arch=cfg.name, route=self.route,
+                              stages=tuple(stages))

@@ -1,0 +1,89 @@
+"""LM workload: TransformerLM behind the GenerativeWorkload protocol.
+
+The paper's text baseline (LLaMA2-7B) — and, through the same config type,
+every assigned ``--arch`` LM — served in the Table III Prefill/Decode regime.
+Characterization mirrors the paper's profile: a 2k-token prefill plus decode
+steps sampled at representative cache lengths and scaled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core import characterize, tracer
+from repro.models.transformer import TransformerLM
+from repro.workload.base import (
+    CostDescriptor,
+    GenerativeWorkload,
+    Stage,
+    register_workload,
+)
+
+TRACE_PREFILL = 2048  # paper workload: 2k prompt
+TRACE_DECODE = 64  # + 64 generated tokens
+TRACE_BATCH = 1  # the paper profiles single-request inference
+
+
+@register_workload(LMConfig)
+class LMWorkload(GenerativeWorkload):
+    route = "lm"
+    modality = "text"
+
+    def build_model(self, cfg: LMConfig) -> TransformerLM:
+        return TransformerLM(cfg)
+
+    def reduced(self):
+        from repro.configs import reduced
+
+        return reduced(self.cfg)
+
+    @property
+    def prompt_vocab(self) -> int:
+        return self.cfg.vocab
+
+    @property
+    def max_prompt_len(self) -> int:
+        return TRACE_PREFILL
+
+    def generate(self, params, tokens, key, *, impl="auto",
+                 max_new_tokens: int = TRACE_DECODE):
+        return self.model.generate(params, tokens, key,
+                                   max_new_tokens=max_new_tokens, impl=impl)
+
+    def cost_descriptor(self) -> CostDescriptor:
+        return CostDescriptor(
+            arch=self.cfg.name, route=self.route,
+            stages=(
+                Stage("prefill", 1, TRACE_PREFILL),
+                # decode demand grows with the KV cache (Fig. 7 linear ramp)
+                Stage("decode", TRACE_DECODE, 1,
+                      demand=tuple(TRACE_PREFILL + i for i in range(TRACE_DECODE))),
+            ),
+        )
+
+    def trace_inputs(self):
+        return (jax.ShapeDtypeStruct((TRACE_BATCH, TRACE_PREFILL), jnp.int32),)
+
+    def trace_events(self, impl: str = "auto") -> list:
+        """Prefill once + decode steps at sampled cache lengths, scaled."""
+        model, cfg = self.model, self.cfg
+        params = characterize.abstract_params(model)
+        S, NEW = TRACE_PREFILL, TRACE_DECODE
+        (toks,) = self.trace_inputs()
+        ev = characterize.trace_workload(
+            lambda p, t: model.prefill(p, t, impl=impl, max_len=S + NEW),
+            params, toks)
+        sample_points = 4
+        for i in range(sample_points):
+            cur = S + i * (NEW // sample_points)
+            caches = jax.eval_shape(
+                lambda: model.init_cache(TRACE_BATCH, cur + 1))
+            tok1 = jax.ShapeDtypeStruct((TRACE_BATCH, 1), jnp.int32)
+            step_ev = characterize.trace_workload(
+                lambda p, t, c: model.decode_step(p, t, c, jnp.int32(cur),
+                                                  impl=impl),
+                params, tok1, caches)
+            ev += tracer.scale_events(step_ev, NEW // sample_points)
+        return ev

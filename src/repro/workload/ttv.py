@@ -1,0 +1,89 @@
+"""Text-to-Video workloads (Make-A-Video diffusion / Phenaki transformer).
+
+Make-A-Video denoises a (frames x H x W) video volume: per-tick demand is
+the spatial-UNet U-shape times the frame count, plus the temporal-attention
+passes the paper singles out (Fig. 11: 2x time at 9x fewer FLOPs).  Phenaki
+parallel-decodes a constant-length (frames x tokens) grid like Muse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.ttv import (
+    MakeAVideoPipeline,
+    PhenakiConfig,
+    PhenakiModel,
+    TTVConfig,
+)
+from repro.workload.base import (
+    CostDescriptor,
+    GenerativeWorkload,
+    Stage,
+    register_workload,
+)
+from repro.workload.diffusion import REDUCED_TEXT, unet_demand
+
+
+@register_workload(TTVConfig)
+class MakeAVideoWorkload(GenerativeWorkload):
+    route = "pod"
+    modality = "video"
+
+    def build_model(self, cfg: TTVConfig) -> MakeAVideoPipeline:
+        return MakeAVideoPipeline(cfg)
+
+    def reduced(self) -> TTVConfig:
+        cfg = self.cfg
+        return dataclasses.replace(
+            cfg, name=cfg.name + "-reduced",
+            unet=dataclasses.replace(
+                cfg.unet, model_channels=32, channel_mult=(1, 2),
+                num_res_blocks=1, attn_levels=(0,), context_dim=64,
+                head_channels=8, groups=8,
+            ),
+            text=REDUCED_TEXT, frames=4, image_size=16, denoise_steps=2,
+            temporal_head_channels=8,
+        )
+
+    def cost_descriptor(self) -> CostDescriptor:
+        cfg = self.cfg
+        hw = cfg.image_size // cfg.latent_down
+        # frames fold into batch for the spatial UNet: demand scales by F
+        demand = tuple(d * cfg.frames for d in unet_demand(hw, cfg.unet))
+        return CostDescriptor(
+            arch=cfg.name, route=self.route,
+            stages=(
+                Stage("text_encoder", 1, cfg.text.max_len),
+                Stage("denoise", cfg.denoise_steps, cfg.frames * hw * hw,
+                      demand=demand),
+            ),
+        )
+
+
+@register_workload(PhenakiConfig)
+class PhenakiWorkload(GenerativeWorkload):
+    route = "pod"
+    modality = "video"
+
+    def build_model(self, cfg: PhenakiConfig) -> PhenakiModel:
+        return PhenakiModel(cfg)
+
+    def reduced(self) -> PhenakiConfig:
+        cfg = self.cfg
+        return dataclasses.replace(
+            cfg, name=cfg.name + "-reduced", n_layers=2, d_model=64, n_heads=4,
+            d_ff=128, video_vocab=128, frames=3, tokens_per_frame=16,
+            parallel_steps=3, text=REDUCED_TEXT,
+        )
+
+    def cost_descriptor(self) -> CostDescriptor:
+        cfg = self.cfg
+        S = cfg.frames * cfg.tokens_per_frame
+        return CostDescriptor(
+            arch=cfg.name, route=self.route,
+            stages=(
+                Stage("text_encoder", 1, cfg.text.max_len),
+                Stage("parallel_decode", cfg.parallel_steps, S, demand=(S,)),
+            ),
+        )

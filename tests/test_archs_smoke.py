@@ -13,6 +13,16 @@ from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 B, S = 2, 24
 
+# Heaviest reduced archs (MoE dispatch, enc-dec, SSM/hybrid scans) run in the
+# slow tier; the fast dev loop (pytest -m "not slow") keeps one of each
+# cheap family.
+_HEAVY = {"recurrentgemma-9b", "deepseek-moe-16b", "whisper-base",
+          "qwen3-moe-30b-a3b", "mamba2-780m", "qwen2-72b"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+    for a in ASSIGNED_ARCHS
+]
+
 
 def _batch_for(cfg, key):
     batch = {}
@@ -29,7 +39,7 @@ def _batch_for(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_and_train_step(arch, rng_key):
     cfg = reduced(get_config(arch))
     lm = TransformerLM(cfg)
@@ -58,7 +68,7 @@ def test_forward_and_train_step(arch, rng_key):
     assert max(jax.tree.leaves(moved)) > 0
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(arch, rng_key):
     """prefill + step-by-step decode == full forward (KV-cache correctness)."""
     cfg = reduced(get_config(arch))

@@ -81,6 +81,7 @@ def test_analytic_profile_matches_traced(sd_events):
     assert sorted(set(pred)) == sorted(set(traced.seq_lens))
 
 
+@pytest.mark.slow  # abstract-traces the full-size 3B Muse
 def test_muse_parallel_decode_constant_seq():
     cfg = with_dtype(get_config("muse"), jnp.bfloat16)
     m = build_suite_model(cfg)

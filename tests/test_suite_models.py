@@ -7,6 +7,8 @@ import pytest
 from repro.configs import get_config
 from repro.configs.suite import SUITE, build_suite_model, reduced_suite_config
 
+pytestmark = pytest.mark.slow  # sample+train+grad per suite model (minutes)
+
 
 @pytest.mark.parametrize("name", [n for n in SUITE if n != "llama2-7b"])
 def test_suite_sample_and_train(name, rng_key):

@@ -1,23 +1,48 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV; ``--json PATH`` additionally writes the rows as a BENCH JSON so the
+# perf trajectory is recorded run over run.
+import argparse
+import json
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON (e.g. BENCH_kernels.json)")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only benches whose name contains SUBSTR")
+    args = ap.parse_args()
+
     from benchmarks.paper_figures import ALL_BENCHES
 
+    results = []
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
         t0 = time.time()
         try:
             rows = bench()
         except Exception as e:  # noqa: BLE001
             print(f"{bench.__name__},0,ERROR:{type(e).__name__}:{e}")
+            results.append({"bench": bench.__name__, "name": bench.__name__,
+                            "us_per_call": 0.0,
+                            "derived": f"ERROR:{type(e).__name__}:{e}",
+                            "error": f"{type(e).__name__}: {e}"})
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+            results.append({"bench": bench.__name__, "name": name,
+                            "us_per_call": us, "derived": derived})
         print(f"# {bench.__name__} took {time.time() - t0:.1f}s",
               file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": "bench-rows/v1", "rows": results}, f, indent=1)
+        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,12 @@
 """Reproduce the paper's characterization tables for the full eight-model
 suite (abstract tracing — runs in ~1 minute on CPU, no memory).
 
+Columns: attention share at baseline and post-Flash-Attention (paper Fig. 6
+/ Table II), then the C1 follow-up — the conv-stack share post-FA and what
+the fused implicit-GEMM conv subsystem (``impl=interpret``/``pallas``) does
+to it.  ``conv% fused`` is normalized to the *same* post-FA total, so the
+drop reflects the HBM traffic the fusion removes.
+
     PYTHONPATH=src:. python examples/characterize_suite.py
 """
 
@@ -17,7 +23,8 @@ from repro.workload import workload_for  # noqa: E402
 
 def main():
     print(f"{'model':18s} {'route':5s} {'regime':13s} {'attn% base':>10s} "
-          f"{'attn% FA':>9s} {'FA e2e':>7s} {'seq var':>8s}")
+          f"{'attn% FA':>9s} {'FA e2e':>7s} {'conv% FA':>9s} "
+          f"{'conv% fused':>11s} {'seq var':>8s}")
     for name in SUITE:
         # suite_events routes through workload_for(cfg).trace_events —
         # one characterization recipe per GenerativeWorkload
@@ -26,14 +33,22 @@ def main():
         flash = list(suite_events(name, "blocked_jax"))
         fb = perf_model.breakdown_fraction(base)
         t_base = perf_model.total_time(base)
+        t_flash = perf_model.total_time(flash)
         ff_abs = perf_model.breakdown(flash)
         rep = amdahl.flash_speedup(base, flash)
         regime = prefill_decode.classify(base)["regime"]
         prof = seq_profile.profile(base)
+        if any(e.op == "conv" for e in flash):
+            fused = list(suite_events(name, "interpret"))
+            conv_fa = f"{perf_model.conv_stack_time(flash) / t_flash:>8.1%}"
+            conv_fused = f"{perf_model.conv_stack_time(fused) / t_flash:>10.1%}"
+        else:
+            conv_fa, conv_fused = f"{'-':>8s}", f"{'-':>10s}"
         print(f"{name:18s} {route:5s} {regime:13s} "
               f"{fb.get('attention', 0):>9.1%} "
               f"{ff_abs.get('attention', 0) / t_base:>8.1%} "
-              f"{rep.e2e_speedup:>6.2f}x {prof.variation:>7.1f}x")
+              f"{rep.e2e_speedup:>6.2f}x {conv_fa} "
+              f"{conv_fused} {prof.variation:>7.1f}x")
 
 
 if __name__ == "__main__":

@@ -99,6 +99,27 @@ def total_bytes(events: list[OpEvent]) -> float:
     return sum(e.total_bytes for e in events)
 
 
+_CONV_STACK_SCOPES = ("_res/", "_down/", "_up/", "decoder/", "conv_in",
+                      "conv_out", "gn_out")
+
+
+def is_conv_stack(e: OpEvent) -> bool:
+    """Events of the diffusion conv stack (paper C1): conv ops plus the
+    norm/pointwise glue inside ResBlocks, up/down-sampling and decoder heads
+    — but NOT the attention-block LayerNorms/GroupNorms, which belong to the
+    attention story."""
+    if e.op == "conv":
+        return True
+    if e.op not in ("norm", "pointwise"):
+        return False
+    return any(s in e.name for s in _CONV_STACK_SCOPES)
+
+
+def conv_stack_time(events: list[OpEvent], hw: Hardware = TPU_V5E) -> float:
+    """Modeled seconds in the conv stack (what the fused conv2d kernel moves)."""
+    return sum(op_time(e, hw) for e in events if is_conv_stack(e))
+
+
 def category_time(events: list[OpEvent], category: str, hw: Hardware = TPU_V5E,
                   **meta_filter) -> float:
     t = 0.0

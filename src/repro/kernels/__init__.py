@@ -12,9 +12,14 @@ Kernels present:
     into the BlockSpec index_map (the TPU-native adaptation of the paper §VI).
   * ``groupnorm_silu`` — fused GroupNorm + SiLU for diffusion ResNet blocks
     (the paper's C1: GroupNorm is 4-11% of diffusion time).
+  * ``conv2d`` — fused implicit-GEMM NHWC Conv2D (3x3 stride-1/2 and 1x1)
+    with fused GroupNorm(+SiLU) producer, bias / time-embedding / SiLU /
+    residual epilogues and next-GroupNorm stats emission, plus a fused-layout
+    temporal Conv1D for TTV — targeting C1's post-FA bottleneck (Convolution
+    is up to 44% of diffusion execution time).
 
 The paper itself optimizes exactly one hot-spot (Attention, via Flash
 Attention); the flash kernel is therefore the paper-faithful artifact, and
-groupnorm_silu is a beyond-paper addition targeting the post-FA bottleneck
-the paper identifies.
+groupnorm_silu / conv2d are beyond-paper additions targeting the post-FA
+bottleneck the paper identifies.
 """

@@ -1,0 +1,20 @@
+"""Fused implicit-GEMM Conv2D kernel subsystem (paper C1: post-Flash
+Attention, Convolution dominates diffusion execution time).
+
+Package layout mirrors ``flash_attention``:
+  * ``conv2d.py`` — the Pallas TPU kernels (implicit-GEMM Conv2D with fused
+    GroupNorm producer / epilogues, temporal Conv1D).
+  * ``ops.py``    — the dispatching call-site API (``conv2d``,
+    ``temporal_conv1d``, GroupNorm-affine helpers, impl resolution).
+  * ``ref.py``    — the pure-jnp oracle and differentiable ``xla`` tier.
+"""
+
+from repro.kernels.conv2d import ops, ref  # noqa: F401
+from repro.kernels.conv2d.ops import (  # noqa: F401
+    affine_from_stats,
+    conv2d,
+    groupnorm_affine,
+    is_fused,
+    resolve_model_impl,
+    temporal_conv1d,
+)

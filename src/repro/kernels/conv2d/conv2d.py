@@ -1,0 +1,340 @@
+"""Fused implicit-GEMM NHWC Conv2D Pallas TPU kernel (+ temporal Conv1D).
+
+Targets the paper's C1 finding: once Flash Attention is applied, Convolution
+is up to 44% of diffusion execution time, and the baseline conv stack
+round-trips HBM between GroupNorm, conv, time-embedding add and residual add.
+This kernel executes the whole chain in one pass:
+
+  * **implicit GEMM**: the (KH x KW x C_in) patch contraction is never
+    materialized.  The output is tiled as (row-block x C_out-block) MXU
+    GEMMs; for each (kh, kw) tap the input block is *statically* shifted
+    (``lax.slice`` with stride) and multiplied against the (C_in, C_out)
+    weight slice, accumulating in fp32 VMEM scratch.
+  * **halo via the grid**: output row-block ``io`` needs input rows from
+    row-blocks ``io-1 .. io+1`` (3x3 conv).  The innermost grid axis walks
+    those neighbors; the BlockSpec index_map clamps at the image edges and
+    ``pl.when`` skips out-of-range contributions, so no padded/overlapping
+    copy of the input is ever created in HBM.
+  * **fused epilogues**: bias, broadcast time-embedding add, SiLU and
+    residual add are applied to the accumulator before the single output
+    write.
+  * **fused GroupNorm producer**: a GroupNorm (+SiLU) feeding the conv
+    collapses — once its group statistics are known — to a per-(batch,
+    channel) affine ``x * a + b``; the kernel applies it to input blocks in
+    VMEM, so the normalized tensor never exists in HBM.
+  * **stats emission**: optionally accumulates per-(batch, out-channel)
+    sum / sum-of-squares of the epilogue output into a tiny second output,
+    which is exactly what the *next* GroupNorm needs — a ResBlock's second
+    norm then costs no extra read pass over the activation.
+
+Grid = (B, n_cout, n_oh, n_cin, n_halo); the last two axes are the
+sequential reduction (Pallas TPU runs the grid in order, scratch carries
+across steps, the output block is written once at the final step).  n_cout
+sits *outside* n_oh so the stats block (b, cout-block) stays resident across
+all of its row-block visits.
+
+Layouts: x (B, H, W, C_in); w (KH, KW, C_in, C_out); out (B, OH, OW, C_out).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (channel/row block sizing)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _conv2d_kernel(
+    *refs,
+    K: int,
+    stride: int,
+    pad: int,
+    bh: int,
+    bh_in: int,
+    W: int,
+    OW: int,
+    OH: int,
+    H: int,
+    n_oh: int,
+    n_cin: int,
+    n_halo: int,
+    has_gn: bool,
+    gn_silu: bool,
+    has_bias: bool,
+    has_temb: bool,
+    has_res: bool,
+    act_silu: bool,
+    emit_stats: bool,
+):
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it)
+    a_ref = next(it) if has_gn else None
+    b_ref = next(it) if has_gn else None
+    bias_ref = next(it) if has_bias else None
+    temb_ref = next(it) if has_temb else None
+    res_ref = next(it) if has_res else None
+    o_ref = next(it)
+    stats_ref = next(it) if emit_stats else None
+    acc = next(it)
+
+    io = pl.program_id(2)
+    ci = pl.program_id(3)
+    ih = pl.program_id(4)
+    off = 1 if n_halo == 3 else 0
+
+    @pl.when(jnp.logical_and(ci == 0, ih == 0))
+    def _init_acc():
+        acc[...] = jnp.zeros_like(acc)
+
+    if emit_stats:
+
+        @pl.when((io == 0) & (ci == 0) & (ih == 0))
+        def _init_stats():
+            stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    # Unrolled over the halo neighbors so every slice offset below is static.
+    for hs in range(n_halo):
+        j = hs - off  # which vertical neighbor block: -1 / 0 / +1
+        blk = io + j
+        ok = ih == hs
+        if j < 0:
+            ok = jnp.logical_and(ok, blk >= 0)
+        if j > 0:
+            ok = jnp.logical_and(ok, blk < n_oh)
+
+        @pl.when(ok)
+        def _contribute(j=j, blk=blk):
+            x = x_ref[0].astype(jnp.float32)  # (bh_in, W, bcin)
+            if has_gn:
+                x = x * a_ref[0].astype(jnp.float32) + b_ref[0].astype(jnp.float32)
+                if gn_silu:
+                    x = x * jax.nn.sigmoid(x)
+                # The affine must not turn conv zero-padding rows (H..H_pad)
+                # into nonzero values: re-zero rows past the true height.
+                rows = jax.lax.broadcasted_iota(jnp.int32, (bh_in, 1, 1), 0)
+                x = jnp.where(blk * bh_in + rows < H, x, 0.0)
+            for kh in range(K):
+                # output row r of this block reads input row
+                # stride*r + kh - pad (relative to neighbor block j's rows)
+                rs = kh - pad - j * bh_in
+                r0 = max(0, (-rs + stride - 1) // stride)
+                r1 = min(bh, (bh_in - 1 - rs) // stride + 1)
+                if r1 <= r0:
+                    continue
+                x_rows = jax.lax.slice(
+                    x,
+                    (rs + stride * r0, 0, 0),
+                    (rs + stride * (r1 - 1) + 1, W, x.shape[2]),
+                    (stride, 1, 1),
+                )  # (r1-r0, W, bcin)
+                for kw in range(K):
+                    cs = kw - pad
+                    c0 = max(0, (-cs + stride - 1) // stride)
+                    c1 = min(OW, (W - 1 - cs) // stride + 1)
+                    if c1 <= c0:
+                        continue
+                    xs = jax.lax.slice(
+                        x_rows,
+                        (0, cs + stride * c0, 0),
+                        (r1 - r0, cs + stride * (c1 - 1) + 1, x.shape[2]),
+                        (1, stride, 1),
+                    )  # (r1-r0, c1-c0, bcin)
+                    wk = w_ref[kh, kw].astype(jnp.float32)  # (bcin, bcout)
+                    part = jax.lax.dot_general(
+                        xs.reshape((r1 - r0) * (c1 - c0), xs.shape[2]),
+                        wk,
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    )
+                    acc[r0:r1, c0:c1, :] += part.reshape(
+                        r1 - r0, c1 - c0, part.shape[1]
+                    )
+
+    @pl.when(jnp.logical_and(ci == n_cin - 1, ih == n_halo - 1))
+    def _finalize():
+        y = acc[...]
+        if has_bias:
+            y = y + bias_ref[0].astype(jnp.float32)
+        if has_temb:
+            y = y + temb_ref[0].astype(jnp.float32)
+        if act_silu:
+            y = y * jax.nn.sigmoid(y)
+        if has_res:
+            y = y + res_ref[0].astype(jnp.float32)
+        o_ref[0] = y.astype(o_ref.dtype)
+        if emit_stats:
+            rows = jax.lax.broadcasted_iota(jnp.int32, (y.shape[0], OW, 1), 0)
+            ym = jnp.where(io * bh + rows < OH, y, 0.0)  # mask padded tail rows
+            stats_ref[0] += jnp.stack(
+                [jnp.sum(ym, axis=(0, 1)), jnp.sum(ym * ym, axis=(0, 1))]
+            )
+
+
+def conv2d_pallas(
+    x: jax.Array,  # (B, H, W, C_in)
+    w: jax.Array,  # (K, K, C_in, C_out)
+    *,
+    stride: int = 1,
+    gn_a: jax.Array | None = None,  # (B, C_in)
+    gn_b: jax.Array | None = None,
+    gn_silu: bool = True,
+    bias: jax.Array | None = None,  # (C_out,)
+    temb: jax.Array | None = None,  # (B, C_out)
+    silu: bool = False,
+    residual: jax.Array | None = None,  # (B, OH, OW, C_out)
+    emit_stats: bool = False,
+    block_rows: int = 2048,  # target output rows (bh * OW) per GEMM tile
+    block_cin: int = 256,
+    block_cout: int = 256,
+    interpret: bool = False,
+):
+    B, H, W, C_in = x.shape
+    K = w.shape[0]
+    assert w.shape[:2] == (K, K) and w.shape[2] == C_in, w.shape
+    C_out = w.shape[-1]
+    pad = K // 2
+    OH = (H + 2 * pad - K) // stride + 1
+    OW = (W + 2 * pad - K) // stride + 1
+
+    bcin = _largest_divisor(C_in, block_cin)
+    bcout = _largest_divisor(C_out, block_cout)
+    # stride-s input blocks are s x taller than output blocks — shrink the
+    # row tile so the VMEM-resident input block stays bounded.
+    bh = max(1, min(OH, (block_rows // (stride * stride)) // max(OW, 1)))
+    n_oh = pl.cdiv(OH, bh)
+    bh_in = bh * stride
+    n_cin = C_in // bcin
+    n_cout = C_out // bcout
+    n_halo = 1 if (K == 1 or n_oh == 1) else 3
+    off = 1 if n_halo == 3 else 0
+
+    H_pad = n_oh * bh_in
+    OH_pad = n_oh * bh
+    if H_pad > H:
+        x = jnp.pad(x, [(0, 0), (0, H_pad - H), (0, 0), (0, 0)])
+    if residual is not None and OH_pad > OH:
+        residual = jnp.pad(residual, [(0, 0), (0, OH_pad - OH), (0, 0), (0, 0)])
+
+    inputs = [x, w]
+    in_specs = [
+        pl.BlockSpec(
+            (1, bh_in, W, bcin),
+            lambda b, co, io, ci, ih: (b, jnp.clip(io + ih - off, 0, n_oh - 1), 0, ci),
+        ),
+        pl.BlockSpec((K, K, bcin, bcout), lambda b, co, io, ci, ih: (0, 0, ci, co)),
+    ]
+    if gn_a is not None:
+        inputs += [
+            gn_a.astype(jnp.float32).reshape(B, C_in),
+            gn_b.astype(jnp.float32).reshape(B, C_in),
+        ]
+        in_specs += [pl.BlockSpec((1, bcin), lambda b, co, io, ci, ih: (b, ci))] * 2
+    if bias is not None:
+        inputs.append(bias.reshape(1, C_out))
+        in_specs.append(pl.BlockSpec((1, bcout), lambda b, co, io, ci, ih: (0, co)))
+    if temb is not None:
+        inputs.append(temb.reshape(B, C_out))
+        in_specs.append(pl.BlockSpec((1, bcout), lambda b, co, io, ci, ih: (b, co)))
+    if residual is not None:
+        inputs.append(residual)
+        in_specs.append(
+            pl.BlockSpec((1, bh, OW, bcout), lambda b, co, io, ci, ih: (b, io, 0, co))
+        )
+
+    out_shape = [jax.ShapeDtypeStruct((B, OH_pad, OW, C_out), x.dtype)]
+    out_specs = [
+        pl.BlockSpec((1, bh, OW, bcout), lambda b, co, io, ci, ih: (b, io, 0, co))
+    ]
+    if emit_stats:
+        out_shape.append(jax.ShapeDtypeStruct((B, 2, C_out), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, 2, bcout), lambda b, co, io, ci, ih: (b, 0, co))
+        )
+
+    kernel = functools.partial(
+        _conv2d_kernel,
+        K=K, stride=stride, pad=pad, bh=bh, bh_in=bh_in, W=W, OW=OW, OH=OH,
+        H=H, n_oh=n_oh, n_cin=n_cin, n_halo=n_halo,
+        has_gn=gn_a is not None, gn_silu=gn_silu, has_bias=bias is not None,
+        has_temb=temb is not None, has_res=residual is not None,
+        act_silu=silu, emit_stats=emit_stats,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, n_cout, n_oh, n_cin, n_halo),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bh, OW, bcout), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    y = out[0][:, :OH]
+    return (y, out[1]) if emit_stats else y
+
+
+# ---------------------------------------------------------------------------
+# Temporal Conv1D (TTV, paper §VI) with the layout permute fused into the
+# BlockSpec index_map — mirrors temporal_flash_attention.
+# ---------------------------------------------------------------------------
+
+
+def _tconv_kernel(x_ref, w_ref, bias_ref, o_ref, *, K: int, pad: int):
+    x = x_ref[0].astype(jnp.float32)  # (F, bn, C)
+    F = x.shape[0]
+    y = jnp.zeros((F, x.shape[1], w_ref.shape[2]), jnp.float32)
+    for k in range(K):
+        s = k - pad  # output frame f reads input frame f + s
+        f0, f1 = max(0, -s), min(F, F - s)
+        if f1 <= f0:
+            continue
+        xs = jax.lax.slice(x, (f0 + s, 0, 0), (f1 + s, x.shape[1], x.shape[2]))
+        wk = w_ref[k].astype(jnp.float32)  # (C, bcout)
+        part = jax.lax.dot_general(
+            xs.reshape((f1 - f0) * xs.shape[1], xs.shape[2]),
+            wk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(f1 - f0, xs.shape[1], wk.shape[1])
+        y += jnp.pad(part, [(f0, F - f1), (0, 0), (0, 0)])
+    y = y + bias_ref[0].astype(jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def temporal_conv1d_pallas(
+    x: jax.Array,  # (B, F, N, C) — spatial layout, N = H*W (pre-padded to block)
+    w: jax.Array,  # (K, C, C_out)
+    bias: jax.Array,  # (C_out,)
+    *,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, F, N, C = x.shape
+    K, _, C_out = w.shape
+    pad = K // 2
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    bcout = _largest_divisor(C_out, 256)
+    kernel = functools.partial(_tconv_kernel, K=K, pad=pad)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, C_out // bcout, N // block_n),
+        in_specs=[
+            pl.BlockSpec((1, F, block_n, C), lambda b, co, i: (b, 0, i, 0)),
+            pl.BlockSpec((K, C, bcout), lambda b, co, i: (0, 0, co)),
+            pl.BlockSpec((1, bcout), lambda b, co, i: (0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, F, block_n, bcout), lambda b, co, i: (b, 0, i, co)),
+        out_shape=jax.ShapeDtypeStruct((B, F, N, C_out), x.dtype),
+        interpret=interpret,
+    )(x, w, bias.reshape(1, C_out))

@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the fused Conv2D (and temporal Conv1D) kernels.
+
+This is the ground truth every other implementation (pallas, interpret, xla,
+naive) is validated against, and it doubles as the differentiable fallback:
+the ``xla`` dispatch tier *is* this function, and the Pallas tiers define
+their ``jax.custom_vjp`` backward pass through it.
+
+Semantics of one fused call (all pieces optional):
+
+    x_hat = silu?(x * gn_a + gn_b)          # fused GroupNorm producer
+    y     = conv2d(x_hat, w, stride, SAME)  # implicit GEMM on the MXU
+    y     = y + bias + temb[:, None, None]  # per-channel / per-(batch,channel)
+    y     = silu?(y)
+    out   = y + residual
+    stats = (sum_c y, sum_c y^2) per (batch, out-channel)   # for the *next*
+                                                            # GroupNorm's mean/var
+
+Everything is computed in fp32 regardless of input dtype, then cast back.
+``gn_a``/``gn_b`` are the per-(batch, in-channel) affine coefficients a
+GroupNorm collapses to once its group statistics are known — see
+``ops.groupnorm_affine``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_DIMSPEC = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d_ref(
+    x: jax.Array,  # (B, H, W, C_in)
+    w: jax.Array,  # (K, K, C_in, C_out)
+    *,
+    stride: int = 1,
+    gn_a: jax.Array | None = None,  # (B, C_in) fp32
+    gn_b: jax.Array | None = None,
+    gn_silu: bool = True,
+    bias: jax.Array | None = None,  # (C_out,)
+    temb: jax.Array | None = None,  # (B, C_out)
+    silu: bool = False,
+    residual: jax.Array | None = None,  # (B, OH, OW, C_out)
+    emit_stats: bool = False,
+):
+    xf = x
+    if gn_a is not None:
+        xh = x.astype(jnp.float32) * gn_a[:, None, None, :].astype(jnp.float32)
+        xh = xh + gn_b[:, None, None, :].astype(jnp.float32)
+        if gn_silu:
+            xh = jax.nn.silu(xh)
+        xf = xh.astype(x.dtype)
+    k = w.shape[0]
+    pad = k // 2
+    # operands stay in the model dtype (bf16 stays bf16 — the HBM-relevant
+    # behavior the tracer bills); only the accumulator is fp32.
+    y = jax.lax.conv_general_dilated(
+        xf,
+        w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=_DIMSPEC,
+        preferred_element_type=jnp.float32,
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if temb is not None:
+        y = y + temb[:, None, None, :].astype(jnp.float32)
+    if silu:
+        y = jax.nn.silu(y)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    out = y.astype(x.dtype)
+    if emit_stats:
+        stats = jnp.stack(
+            [jnp.sum(y, axis=(1, 2)), jnp.sum(y * y, axis=(1, 2))], axis=1
+        )  # (B, 2, C_out) fp32
+        return out, stats
+    return out
+
+
+def temporal_conv1d_ref(
+    x: jax.Array,  # (B, F, H, W, C) — conv over the frame axis F
+    w: jax.Array,  # (K, C, C)
+    bias: jax.Array | None = None,
+):
+    """The conventional materialized-permute implementation the paper
+    profiles: (B,F,H,W,C) -> (B*H*W, F, C) -> conv1d -> permute back."""
+    B, F, H, W, C = x.shape
+    k = w.shape[0]
+    pad = k // 2
+    xf = x.transpose(0, 2, 3, 1, 4).reshape(B * H * W, F, C)
+    y = jax.lax.conv_general_dilated(
+        xf[:, :, None, :],
+        w.astype(x.dtype)[:, None, :, :],  # (K, 1, C, C) HWIO
+        window_strides=(1, 1),
+        padding=[(pad, pad), (0, 0)],
+        dimension_numbers=_DIMSPEC,
+        preferred_element_type=jnp.float32,
+    )[:, :, 0, :]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    y = y.reshape(B, H, W, F, C).transpose(0, 3, 1, 2, 4)
+    return y.astype(x.dtype)

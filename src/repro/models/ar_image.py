@@ -163,7 +163,7 @@ class ARImageModel(Module):
         if not decode_pixels:
             return tokens
         with tracer.scope("vq_decoder"):
-            return self.vq(params["vq"], tokens)
+            return self.vq(params["vq"], tokens, impl=impl)
 
     def sample_parallel(self, params, ctx, key, *, impl="auto"):
         """Muse parallel decoding: iterative unmasking with a cosine schedule.

@@ -180,7 +180,7 @@ class DiffusionPipeline(Module):
             if return_latents or self.vae is None:
                 return z
             with tracer.scope("vae"):
-                return self.vae(params["vae"], z)
+                return self.vae(params["vae"], z, impl=impl)
         # pixel cascade: base image then SR stages conditioned on upsampled lowres
         img = z
         for i, stage in enumerate(cfg.sr_stages):

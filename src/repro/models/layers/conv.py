@@ -4,6 +4,14 @@ Convolution is the paper's headline post-Flash-Attention bottleneck (C1: up
 to 44% of diffusion execution time), so every conv records a tracer event
 with exact FLOPs and HBM traffic.  Layout is NHWC (TPU-native; convs lower to
 MXU matmuls over the C/KhKwC contraction).
+
+``Conv2D`` dispatches through ``repro.kernels.conv2d.ops.conv2d`` — the
+fused implicit-GEMM subsystem — and exposes its fused epilogues (bias /
+time-embedding add / SiLU / residual add), the fused GroupNorm(+SiLU)
+producer, and next-GroupNorm stats emission.  The tracer event models the
+HBM-traffic difference between the fused and unfused tiers, exactly the way
+``_attention_event`` models naive-vs-flash: that is what moves the Fig. 6
+operator breakdown when the fused path is selected.
 """
 
 from __future__ import annotations
@@ -16,13 +24,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tracer
-from repro.models.layers.basic import nbytes
+from repro.kernels.conv2d import ops as conv_ops
 from repro.nn import Module, ParamDef, scaled_init, zeros_init
 
 _DIMSPEC = ("NHWC", "HWIO", "NHWC")
 
 
-def _record_conv(name, x, y, w_shape, groups=1):
+def _record_conv(
+    name, x, y, w_shape, *, groups=1, impl="xla", has_bias=False, gn=False,
+    temb=False, silu=False, residual=False, emit_stats=False, extra_bytes=0.0,
+    bw_efficiency=None,
+):
+    """Conv operator event with fused-vs-unfused HBM-traffic modeling.
+
+    Every tier reads x + weights (+ bias + epilogue operands) and writes y.
+    On the unfused tiers (naive / xla library path) each epilogue stage is
+    its own kernel, costing one extra read+write round trip of y per stage —
+    and an unfused GroupNorm producer costs a full normalize pass over x.
+    The fused Pallas tiers apply everything while the tile is VMEM-resident;
+    stats emission adds only the tiny (B, 2, C_out) write.
+    """
     if not tracer.active():
         return
     B = x.shape[0]
@@ -30,12 +51,44 @@ def _record_conv(name, x, y, w_shape, groups=1):
     kh_kw_cin = int(np.prod(w_shape[:-1]))
     cout = w_shape[-1]
     flops = 2.0 * B * out_spatial * cout * kh_kw_cin / max(groups, 1)
-    tracer.record(
-        "conv",
-        name,
-        flops=flops,
-        bytes_hbm=nbytes((x.shape, x.dtype), (y.shape, y.dtype), (w_shape, x.dtype)),
-    )
+    elem = tracer.dtype_bytes(x.dtype)
+    n_x = int(np.prod(x.shape)) * elem
+    n_y = int(np.prod(y.shape)) * elem
+    fused = impl in ("pallas", "interpret")
+    traffic = n_x + n_y + int(np.prod(w_shape)) * elem + extra_bytes
+    if has_bias:
+        traffic += cout * elem
+    if gn:
+        traffic += 2 * B * x.shape[-1] * 4  # per-(batch, channel) affine
+    if temb:
+        traffic += B * cout * elem
+    if residual:
+        traffic += n_y  # residual operand read
+    if emit_stats:
+        traffic += B * 2 * cout * 4
+    if not fused:
+        # each unfused epilogue stage re-round-trips the activation
+        traffic += 2 * n_y * sum((temb, silu, residual))
+        if gn:
+            traffic += 2 * n_x  # materialized normalize pass over the input
+    meta = dict(impl=impl, fused=fused)
+    if bw_efficiency is not None:
+        meta["bw_efficiency"] = bw_efficiency
+    tracer.record("conv", name, flops=flops, bytes_hbm=traffic, **meta)
+
+
+def fused_gn_producer(x, gn_params, *, groups, name="gn_stats"):
+    """Collapse a GroupNorm(+SiLU) that feeds a conv into the per-(batch,
+    channel) affine the fused kernel applies in VMEM.  Costs one statistics
+    read pass over x (recorded as a 1-pass norm event) — the normalized
+    tensor itself never round-trips HBM."""
+    a, b = conv_ops.groupnorm_affine(
+        x, gn_params["scale"], gn_params["bias"], groups=groups)
+    if tracer.active():
+        n = int(np.prod(x.shape)) * tracer.dtype_bytes(x.dtype)
+        tracer.record("norm", name, flops=4.0 * int(np.prod(x.shape)),
+                      bytes_hbm=n + 2 * x.shape[0] * x.shape[-1] * 4)
+    return a, b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,19 +114,41 @@ class Conv2D(Module):
             d["bias"] = ParamDef((self.out_ch,), ("conv_out",), zeros_init, self.dtype)
         return d
 
-    def __call__(self, params, x: jax.Array) -> jax.Array:
+    def __call__(
+        self,
+        params,
+        x: jax.Array,
+        *,
+        impl: str = "auto",
+        gn_affine: tuple | None = None,
+        gn_silu: bool = True,
+        temb: jax.Array | None = None,
+        silu: bool = False,
+        residual: jax.Array | None = None,
+        emit_stats: bool = False,
+    ):
+        """x (B, H, W, C_in) -> y (B, OH, OW, C_out); optionally (y, stats).
+
+        ``impl`` accepts model-level tier names (auto / naive / blocked_jax /
+        pallas / interpret) — resolution to a conv tier happens in
+        ``conv_ops.resolve_model_impl``.
+        """
         w = params["kernel"].astype(x.dtype)
-        pad = self.kernel // 2
-        y = jax.lax.conv_general_dilated(
-            x, w,
-            window_strides=(self.stride, self.stride),
-            padding=[(pad, pad), (pad, pad)],
-            dimension_numbers=_DIMSPEC,
+        bias = params["bias"] if self.use_bias else None
+        conv_impl = conv_ops.resolve_model_impl(impl)
+        out = conv_ops.conv2d(
+            x, w, stride=self.stride, bias=bias, gn_affine=gn_affine,
+            gn_silu=gn_silu, temb=temb, silu=silu, residual=residual,
+            emit_stats=emit_stats, impl=conv_impl,
         )
-        if self.use_bias:
-            y = y + params["bias"].astype(x.dtype)
-        _record_conv(self.name, x, y, w.shape)
-        return y
+        y = out[0] if emit_stats else out
+        _record_conv(
+            self.name, x, y, w.shape,
+            impl=conv_ops._resolve(conv_impl), has_bias=self.use_bias,
+            gn=gn_affine is not None, temb=temb is not None, silu=silu,
+            residual=residual is not None, emit_stats=emit_stats,
+        )
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +183,8 @@ class CausalDepthwiseConv1D(Module):
             feature_group_count=C,
         )[:, :, 0, :]
         y = y + params["bias"].astype(x.dtype)
-        _record_conv(self.name, x, y, (self.width, 1, 1, C), groups=C)
+        _record_conv(self.name, x, y, (self.width, 1, 1, C), groups=C,
+                     has_bias=True)
         return y
 
     def step(self, params, x_new: jax.Array, conv_state: jax.Array):
@@ -123,7 +199,13 @@ class CausalDepthwiseConv1D(Module):
 class TemporalConv1D(Module):
     """Conv over the frame axis of (B, F, H, W, C) video tensors — the
     'temporal convolution' layers TTV models interleave with temporal
-    attention (paper §II-B / Make-A-Video pseudo-3D convs)."""
+    attention (paper §II-B / Make-A-Video pseudo-3D convs).
+
+    ``pallas``/``interpret`` route the frame-axis contraction through the
+    fused BlockSpec index_map kernel (like ``temporal_flash_attention``): the
+    tensor is tiled in place, never permuted in HBM.  The conventional tiers
+    materialize two full (B,F,H,W,C) permutes, which the tracer now counts
+    (with the same strided-access bandwidth penalty as temporal attention)."""
 
     channels: int
     kernel: int = 3
@@ -141,18 +223,21 @@ class TemporalConv1D(Module):
             "bias": ParamDef((self.channels,), ("conv_out",), zeros_init, self.dtype),
         }
 
-    def __call__(self, params, x: jax.Array) -> jax.Array:
+    def __call__(self, params, x: jax.Array, *, impl: str = "auto") -> jax.Array:
         B, F, H, W, C = x.shape
         w = params["kernel"].astype(x.dtype)  # (K, C, C)
-        xf = x.transpose(0, 2, 3, 1, 4).reshape(B * H * W, F, C)
-        pad = self.kernel // 2
-        y = jax.lax.conv_general_dilated(
-            xf[:, :, None, :],
-            w[:, None, :, :],  # (K, 1, C, C)
-            window_strides=(1, 1),
-            padding=[(pad, pad), (0, 0)],
-            dimension_numbers=_DIMSPEC,
-        )[:, :, 0, :]
-        y = y + params["bias"].astype(x.dtype)
-        _record_conv(self.name, xf, y, (self.kernel, 1, C, C))
-        return y.reshape(B, H, W, F, C).transpose(0, 3, 1, 2, 4)
+        conv_impl = conv_ops.resolve_model_impl(impl)
+        y = conv_ops.temporal_conv1d(x, w, params["bias"], impl=conv_impl)
+        resolved = conv_ops._resolve(conv_impl)
+        fused = resolved in ("pallas", "interpret")
+        # conventional path: transpose -> conv -> transpose materializes the
+        # full video tensor twice (read+write each), with F-strided HBM
+        # access achieving a fraction of peak bandwidth (paper Fig. 12).
+        n = int(np.prod(x.shape)) * tracer.dtype_bytes(x.dtype)
+        _record_conv(
+            self.name, x, y, (self.kernel, 1, C, C),
+            impl=resolved, has_bias=True,
+            extra_bytes=0.0 if fused else 4 * n,
+            bw_efficiency=1.0 if fused else 0.5,
+        )
+        return y

@@ -28,7 +28,7 @@ from repro.models.layers.conv import TemporalConv1D
 from repro.models.layers.norms import LayerNorm
 from repro.models.text_encoder import TextEncoder, TextEncoderConfig
 from repro.models.transformer import Block
-from repro.models.unet import UNet2D, UNetConfig
+from repro.models.unet import UNet2D, UNetConfig, _record_pointwise
 from repro.nn import Module, ParamDef, normal_init
 
 
@@ -179,7 +179,8 @@ class VideoUNet(Module):
             hv = h.reshape(bh // frames, frames, hh, wh, ch)
             with tracer.scope(f"temporal/{name}"):
                 hv = self._tattn(ch)(params[f"tattn/{name}"], hv, impl=impl)
-                hv = hv + self._tconv(ch)(params[f"tconv/{name}"], hv)
+                hv = hv + self._tconv(ch)(params[f"tconv/{name}"], hv, impl=impl)
+                _record_pointwise("tconv_residual_add", hv, reads=2)
             return hv.reshape(bh, hh, wh, ch)
 
         out = self.unet(params["unet"], x2d, t2d, ctx2d, impl=impl,

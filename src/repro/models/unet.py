@@ -16,13 +16,24 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tracer
+from repro.kernels.conv2d import ops as conv_ops
 from repro.models.layers.attention import Attention
 from repro.models.layers.basic import Dense, nbytes, sinusoidal_embedding
-from repro.models.layers.conv import Conv2D
+from repro.models.layers.conv import Conv2D, fused_gn_producer
 from repro.models.layers.norms import GroupNorm, LayerNorm
 from repro.nn import Module
+
+
+def _record_pointwise(name, x, reads=1):
+    """Standalone elementwise op (unfused epilogue): reads + one write."""
+    if not tracer.active():
+        return
+    n = int(np.prod(x.shape)) * tracer.dtype_bytes(x.dtype)
+    tracer.record("pointwise", name, flops=float(np.prod(x.shape)),
+                  bytes_hbm=(reads + 1) * n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,14 +96,38 @@ class ResBlock(Module):
             d["skip"] = self._skip().defs()
         return d
 
-    def __call__(self, params, x, temb):
-        h = self._gn1()(params["gn1"], x)
-        h = self._conv1()(params["conv1"], h)
+    def __call__(self, params, x, temb, *, impl="auto"):
         t = self._temb()(params["temb"], jax.nn.silu(temb))
+        if conv_ops.is_fused(impl):
+            # Fused path: gn1 -> conv1 -> (+temb) -> gn2 -> conv2 -> (+skip)
+            # in two conv passes.  gn1 collapses to a per-(batch, channel)
+            # affine applied inside conv1 (one stats read over x); conv1
+            # emits gn2's channel statistics alongside its output, so gn2
+            # costs no activation read at all; conv2 applies gn2's affine to
+            # its input blocks and adds the residual in its epilogue.
+            a1, b1 = fused_gn_producer(
+                x, params["gn1"], groups=min(self.groups, self.c_in),
+                name="gn1_stats")
+            skip = (x if self.c_in == self.c_out
+                    else self._skip()(params["skip"], x, impl=impl))
+            h, stats = self._conv1()(
+                params["conv1"], x, impl=impl, gn_affine=(a1, b1),
+                temb=t.astype(jnp.float32), emit_stats=True)
+            a2, b2 = conv_ops.affine_from_stats(
+                stats, params["gn2"]["scale"], params["gn2"]["bias"],
+                groups=min(self.groups, self.c_out),
+                count=h.shape[1] * h.shape[2])
+            return self._conv2()(
+                params["conv2"], h, impl=impl, gn_affine=(a2, b2),
+                residual=skip)
+        h = self._gn1()(params["gn1"], x)
+        h = self._conv1()(params["conv1"], h, impl=impl)
         h = h + t[:, None, None, :].astype(h.dtype)
+        _record_pointwise("temb_add", h)
         h = self._gn2()(params["gn2"], h)
-        h = self._conv2()(params["conv2"], h)
-        skip = x if self.c_in == self.c_out else self._skip()(params["skip"], x)
+        h = self._conv2()(params["conv2"], h, impl=impl)
+        skip = x if self.c_in == self.c_out else self._skip()(params["skip"], x, impl=impl)
+        _record_pointwise("residual_add", h, reads=2)
         return skip + h
 
 
@@ -220,8 +255,8 @@ class Downsample(Module):
     def defs(self):
         return {"conv": self._conv().defs()}
 
-    def __call__(self, params, x):
-        return self._conv()(params["conv"], x)
+    def __call__(self, params, x, *, impl="auto"):
+        return self._conv()(params["conv"], x, impl=impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,10 +270,18 @@ class Upsample(Module):
     def defs(self):
         return {"conv": self._conv().defs()}
 
-    def __call__(self, params, x):
+    def __call__(self, params, x, *, impl="auto"):
         B, H, W, C = x.shape
+        small = x
         x = jax.image.resize(x, (B, 2 * H, 2 * W, C), "nearest")
-        return self._conv()(params["conv"], x)
+        if tracer.active():
+            # the nearest-resize materializes the 4x tensor before the conv
+            # reads it back — real HBM traffic the breakdown must count.
+            tracer.record(
+                "pointwise", "upsample_resize", flops=0.0,
+                bytes_hbm=nbytes((small.shape, small.dtype), (x.shape, x.dtype)),
+            )
+        return self._conv()(params["conv"], x, impl=impl)
 
 
 class UNet2D(Module):
@@ -342,20 +385,20 @@ class UNet2D(Module):
                      dtype=cfg.dtype)(params["temb2"], jax.nn.silu(temb))
 
         h = Conv2D(cfg.in_channels, cfg.model_channels, 3, dtype=cfg.dtype,
-                   name="conv_in")(params["conv_in"], x)
+                   name="conv_in")(params["conv_in"], x, impl=impl)
         skips = [h]
 
         def run_block(name, kind, ci, co, h):
             mod = self._module(kind, ci, co)
             with tracer.scope(name):
                 if kind == "res":
-                    h = mod(params[name], h, temb)
+                    h = mod(params[name], h, temb, impl=impl)
                 elif kind == "attn":
                     h = mod(params[name], h, context, impl=impl)
                     if temporal_hook is not None:
                         h = temporal_hook(name, h, frames)
                 else:
-                    h = mod(params[name], h)
+                    h = mod(params[name], h, impl=impl)
             return h
 
         for si, blocks in enumerate(plan["down"]):
@@ -374,7 +417,14 @@ class UNet2D(Module):
                     h = jnp.concatenate([h, skips.pop()], axis=-1)
                 h = run_block(f"up_{si}_{bi}_{kind}", kind, ci, co, h)
 
+        conv_out = Conv2D(cfg.model_channels, cfg.out_channels, 3,
+                          dtype=cfg.dtype, name="conv_out")
+        if conv_ops.is_fused(impl):
+            a, b = fused_gn_producer(
+                h, params["gn_out"],
+                groups=min(cfg.groups, cfg.model_channels),
+                name="gn_out_stats")
+            return conv_out(params["conv_out"], h, impl=impl, gn_affine=(a, b))
         h = GroupNorm(cfg.model_channels, min(cfg.groups, cfg.model_channels),
                       fuse_silu=True, dtype=cfg.dtype)(params["gn_out"], h)
-        return Conv2D(cfg.model_channels, cfg.out_channels, 3, dtype=cfg.dtype,
-                      name="conv_out")(params["conv_out"], h)
+        return conv_out(params["conv_out"], h, impl=impl)

@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tracer
+from repro.kernels.conv2d import ops as conv_ops
 from repro.models.layers.basic import Embedding
-from repro.models.layers.conv import Conv2D
+from repro.models.layers.conv import Conv2D, fused_gn_producer
 from repro.models.layers.norms import GroupNorm
 from repro.models.unet import ResBlock, Upsample
 from repro.nn import Module
@@ -73,7 +74,7 @@ class ConvDecoder(Module):
         ).defs()
         return d
 
-    def __call__(self, params, z):
+    def __call__(self, params, z, *, impl="auto"):
         B = z.shape[0]
         temb = jnp.zeros((B, 4), z.dtype)
         h = z
@@ -82,13 +83,21 @@ class ConvDecoder(Module):
             mod = self._module(name, ci, co)
             with tracer.scope(f"decoder/{name}"):
                 if name.startswith("res"):
-                    h = mod(params[name], h, temb)
+                    h = mod(params[name], h, temb, impl=impl)
                 elif name == "out":
-                    h = GroupNorm(ci, min(self.cfg.groups, ci), fuse_silu=True,
-                                  dtype=self.cfg.dtype)(params["gn_out"], h)
-                    h = mod(params[name], h)
+                    if conv_ops.is_fused(impl):
+                        a, b = fused_gn_producer(
+                            h, params["gn_out"],
+                            groups=min(self.cfg.groups, ci),
+                            name="gn_out_stats")
+                        h = mod(params[name], h, impl=impl, gn_affine=(a, b))
+                    else:
+                        h = GroupNorm(ci, min(self.cfg.groups, ci),
+                                      fuse_silu=True, dtype=self.cfg.dtype)(
+                                          params["gn_out"], h)
+                        h = mod(params[name], h, impl=impl)
                 else:
-                    h = mod(params[name], h)
+                    h = mod(params[name], h, impl=impl)
         return h
 
 
@@ -115,11 +124,11 @@ class VQGANDecoder(Module):
             "decoder": self.conv_decoder.defs(),
         }
 
-    def __call__(self, params, tokens):
+    def __call__(self, params, tokens, *, impl="auto"):
         c = self.cfg
         B = tokens.shape[0]
         z = Embedding(c.codebook_size, c.embed_dim, dtype=c.dtype)(
             params["codebook"], tokens
         )
         z = z.reshape(B, c.token_hw, c.token_hw, c.embed_dim)
-        return self.conv_decoder(params["decoder"], z)
+        return self.conv_decoder(params["decoder"], z, impl=impl)

@@ -1,0 +1,143 @@
+"""Model-tier tests of the fused conv subsystem: a ResBlock's
+gn1->conv1->(+temb)->gn2->conv2->(+skip) chain on the fused path must match
+the unfused path numerically and cut its traced HBM traffic >= 2x (the C1
+lever: post-Flash-Attention, the conv stack is the diffusion bottleneck)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import perf_model, tracer
+from repro.models.layers.conv import TemporalConv1D
+from repro.models.unet import ResBlock, UNet2D, UNetConfig, Upsample
+
+
+@pytest.fixture(scope="module")
+def resblock():
+    rb = ResBlock(64, 64, temb_dim=128, groups=8)
+    key = jax.random.PRNGKey(0)
+    p = rb.init(key)
+    x = jax.random.normal(key, (1, 64, 64, 64))
+    temb = jax.random.normal(jax.random.fold_in(key, 1), (1, 128))
+    return rb, p, x, temb
+
+
+def _traced_bytes(fn):
+    with tracer.trace() as tr:
+        fn()
+    return sum(e.total_bytes for e in tr.events), tr.events
+
+
+def test_resblock_fused_matches_unfused(resblock):
+    rb, p, x, temb = resblock
+    y_ref = rb(p, x, temb, impl="blocked_jax")
+    y_fused = rb(p, x, temb, impl="interpret")
+    np.testing.assert_allclose(y_fused, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_resblock_fused_halves_hbm_traffic(resblock):
+    rb, p, x, temb = resblock
+    unfused, _ = _traced_bytes(lambda: rb(p, x, temb, impl="blocked_jax"))
+    fused, ev = _traced_bytes(lambda: rb(p, x, temb, impl="interpret"))
+    assert unfused / fused >= 2.0, (unfused, fused)
+    # the fused path runs in two conv passes + one stats read, with no
+    # standalone pointwise epilogues left over
+    assert not any(e.op == "pointwise" for e in ev)
+    assert all(e.meta.get("fused") for e in ev if e.op == "conv")
+
+
+def test_resblock_skip_conv_path(resblock):
+    """c_in != c_out routes the residual through the fused 1x1 skip conv."""
+    key = jax.random.PRNGKey(2)
+    rb = ResBlock(32, 64, temb_dim=16, groups=8)
+    p = rb.init(key)
+    x = jax.random.normal(key, (2, 9, 9, 32))  # odd spatial
+    temb = jax.random.normal(key, (2, 16))
+    y_ref = rb(p, x, temb, impl="blocked_jax")
+    y_fused = rb(p, x, temb, impl="interpret")
+    np.testing.assert_allclose(y_fused, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_naive_and_xla_conv_events_identical(resblock):
+    """The paper varies only the attention algorithm between its baseline
+    and Flash runs — conv/norm accounting must be identical across the
+    naive and blocked_jax tiers (Amdahl-consistency of Table II)."""
+    rb, p, x, temb = resblock
+    _, ev_n = _traced_bytes(lambda: rb(p, x, temb, impl="naive"))
+    _, ev_x = _traced_bytes(lambda: rb(p, x, temb, impl="blocked_jax"))
+    key = lambda ev: [(e.op, e.flops, e.bytes_hbm) for e in ev]
+    assert key(ev_n) == key(ev_x)
+
+
+def test_conv_event_counts_bias_read(resblock):
+    rb, p, x, temb = resblock
+    _, ev = _traced_bytes(lambda: rb(p, x, temb, impl="blocked_jax"))
+    conv1 = next(e for e in ev if e.op == "conv")
+    elem = 4
+    n = x.size * elem
+    w = 3 * 3 * 64 * 64 * elem
+    # x + y + w + bias — the bias read the old accounting dropped
+    assert conv1.bytes_hbm == n + n + w + 64 * elem
+
+
+def test_upsample_records_resize_traffic():
+    key = jax.random.PRNGKey(3)
+    up = Upsample(16)
+    p = up.init(key)
+    x = jax.random.normal(key, (1, 8, 8, 16))
+    with tracer.trace() as tr:
+        y = up(p, x, impl="blocked_jax")
+    assert y.shape == (1, 16, 16, 16)
+    resize = [e for e in tr.events if e.name == "upsample_resize"]
+    assert len(resize) == 1
+    assert resize[0].bytes_hbm == x.size * 4 + x.size * 4 * 4  # read n, write 4n
+
+
+def test_temporal_conv_permute_traffic_counted():
+    key = jax.random.PRNGKey(4)
+    tc = TemporalConv1D(8)
+    p = tc.init(key)
+    x = jax.random.normal(key, (2, 4, 6, 6, 8))
+    y_ref = tc(p, x, impl="blocked_jax")
+    y_fused = tc(p, x, impl="interpret")
+    np.testing.assert_allclose(y_fused, y_ref, rtol=2e-5, atol=2e-5)
+    with tracer.trace() as tr:
+        tc(p, x, impl="blocked_jax")
+    unfused = tr.events[0]
+    with tracer.trace() as tr:
+        tc(p, x, impl="interpret")
+    fused = tr.events[0]
+    n = x.size * 4
+    assert unfused.bytes_hbm - fused.bytes_hbm == 4 * n  # 2 materialized permutes
+    assert unfused.meta["bw_efficiency"] == 0.5  # F-strided HBM access
+    assert fused.meta["fused"]
+
+
+def test_unet_fused_path_end_to_end():
+    """Whole-UNet parity + conv-stack traffic drop on the fused tier."""
+    cfg = UNetConfig(
+        in_channels=4, out_channels=4, model_channels=16, channel_mult=(1, 2),
+        num_res_blocks=1, attn_levels=(0,), context_dim=32, head_channels=8,
+        groups=8,
+    )
+    unet = UNet2D(cfg)
+    key = jax.random.PRNGKey(5)
+    p = unet.init(key)
+    x = jax.random.normal(key, (1, 16, 16, 4))
+    t = jnp.array([10.0])
+    ctx = jax.random.normal(key, (1, 6, 32))
+    y_ref = unet(p, x, t, ctx, impl="blocked_jax")
+    y_fused = unet(p, x, t, ctx, impl="interpret")
+    np.testing.assert_allclose(y_fused, y_ref, rtol=5e-4, atol=5e-4)
+
+    def total(impl, hw=64):
+        # abstract trace at a production-ish spatial size so activation
+        # traffic (what fusion removes) dominates weight reads
+        xs = jax.ShapeDtypeStruct((1, hw, hw, 4), jnp.float32)
+        with tracer.trace() as tr:
+            jax.eval_shape(lambda p, x: unet(p, x, t, ctx, impl=impl), p, xs)
+        return sum(e.total_bytes for e in tr.events
+                   if perf_model.is_conv_stack(e))
+
+    assert total("blocked_jax") / total("interpret") > 1.5

@@ -1,8 +1,12 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV; ``--json PATH`` additionally writes the rows as a BENCH JSON so the
-# perf trajectory is recorded run over run.
+# CSV; ``--json PATH`` additionally writes the rows as BENCH JSONs so the
+# perf trajectory is recorded run over run.  Benches tagged with a
+# ``bench_group`` attribute (e.g. ``"serving"`` for bench_cascade) land in a
+# sibling file BENCH_<group>.json next to PATH; untagged benches ("kernels")
+# go to PATH itself.
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -10,18 +14,23 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write results as JSON (e.g. BENCH_kernels.json)")
-    ap.add_argument("--only", metavar="SUBSTR", default=None,
-                    help="run only benches whose name contains SUBSTR")
+                    help="also write results as JSON (e.g. BENCH_kernels.json;"
+                         " grouped benches go to sibling BENCH_<group>.json)")
+    ap.add_argument("--only", metavar="SUBSTRS", default=None,
+                    help="run only benches whose name contains one of the "
+                         "comma-separated substrings")
     args = ap.parse_args()
 
     from benchmarks.paper_figures import ALL_BENCHES
 
-    results = []
+    only = [s for s in (args.only or "").split(",") if s]
+    grouped: dict[str, list] = {}
     print("name,us_per_call,derived")
     for bench in ALL_BENCHES:
-        if args.only and args.only not in bench.__name__:
+        if only and not any(s in bench.__name__ for s in only):
             continue
+        group = getattr(bench, "bench_group", "kernels")
+        results = grouped.setdefault(group, [])
         t0 = time.time()
         try:
             rows = bench()
@@ -40,9 +49,13 @@ def main() -> None:
               file=sys.stderr)
 
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"schema": "bench-rows/v1", "rows": results}, f, indent=1)
-        print(f"# wrote {len(results)} rows to {args.json}", file=sys.stderr)
+        for group, results in grouped.items():
+            path = (args.json if group == "kernels" else os.path.join(
+                os.path.dirname(args.json) or ".", f"BENCH_{group}.json"))
+            with open(path, "w") as f:
+                json.dump({"schema": "bench-rows/v1", "rows": results}, f,
+                          indent=1)
+            print(f"# wrote {len(results)} rows to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+"""Serve a TTV cascade through ``ServeEngine(route="cascade")``.
+
+Make-A-Video's stage structure — text encode, keyframe (spatial) denoise,
+temporal refinement — runs as a stage-level pipeline: requests from
+different users batch together *per stage* (paper §IV-C / §V-A), each stage
+at its own batch size, with bounded latent-handoff queues in between.  The
+same command serves a diffusion SR cascade: swap the arch for "imagen".
+
+    PYTHONPATH=src python examples/serve_cascade.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+import repro.configs.suite  # noqa: F401 — registers the paper suite
+from repro.configs import get_config
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.workload import reduced_workload
+
+
+def main():
+    workload = reduced_workload(get_config("make-a-video"))
+    params = workload.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        workload, params,
+        ServeConfig(max_batch=2, buckets=(8, 16), route="cascade"))
+
+    cd = workload.cost_descriptor()
+    print("cascade: " + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
+
+    rng = np.random.default_rng(0)
+    n_requests = 6
+    t0 = time.perf_counter()
+    for rid in range(n_requests):
+        plen = int(rng.integers(4, min(workload.max_prompt_len, 12) + 1))
+        engine.submit(rid, rng.integers(0, workload.prompt_vocab, size=plen))
+    results = engine.run()
+    dt = time.perf_counter() - t0
+
+    c = engine.stats["cascade"]
+    print(f"served {len(results)} requests in {dt:.2f}s over {c['ticks']} "
+          f"ticks (stage concurrency max {c['concurrency']['max']})")
+    for name, st in c["stages"].items():
+        print(f"  {name}: {st['items']} items / {st['batches']} batches "
+              f"(mean batch {st['mean_batch']:.1f}) in {st['exec_s']:.2f}s")
+    h = c["hbm"]
+    print(f"modeled vs end-to-end lockstep: {h['throughput_gain']:.2f}x "
+          f"throughput; HBM peak/mean {h['lockstep']['flatness']:.2f} -> "
+          f"{h['pipelined']['flatness']:.2f} (flatter = better §V-A)")
+    for rid in sorted(results)[:3]:
+        print(f"  req {rid}: video {np.asarray(results[rid]).shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Serve a small LM with batched requests through the unified ServeEngine
 (paper §V-B: sequence-length-bucketed batching).  The same engine serves the
 TTI/TTV suite — try ``python -m repro.launch.serve --arch stable-diffusion
---reduced`` for the denoise-pod route.
+--reduced`` for the denoise-pod route, or ``examples/serve_cascade.py`` for
+stage-level cascade serving (the LM path itself degenerates to a 2-stage
+prefill+decode cascade under ``ServeConfig(route="cascade")``).
 
     PYTHONPATH=src python examples/serve_lm.py
 """

@@ -57,25 +57,39 @@ def attn_memory_scaling_exponent(sizes: list[int], text_encode: int = 77) -> flo
     return num / den
 
 
+def unet_block_profile(
+    latent_hw: int, channel_mult: tuple, num_res_blocks: int,
+    attn_levels: tuple, weight,
+) -> list:
+    """Walk one UNet pass (down -> mid -> up) and collect
+    ``weight(hw, mult, has_attn)`` per block; ``None`` skips the block.
+
+    The single home of the UNet block topology (hw halving per level,
+    ``num_res_blocks`` down / ``num_res_blocks + 1`` up, always-attending
+    mid) — the Fig. 7 attention profile and the serving HBM-demand profile
+    are both derived from it."""
+    prof = []
+    hw = latent_hw
+    n = len(channel_mult)
+    for level in range(n):  # down
+        prof += [weight(hw, channel_mult[level], level in attn_levels)] \
+            * num_res_blocks
+        if level != n - 1:
+            hw //= 2
+    prof.append(weight(hw, channel_mult[-1], True))  # mid (always attends)
+    for level in reversed(range(n)):  # up
+        prof += [weight(hw, channel_mult[level], level in attn_levels)] \
+            * (num_res_blocks + 1)
+        if level != 0:
+            hw *= 2
+    return [v for v in prof if v is not None]
+
+
 def unet_seq_profile(
     latent_hw: int, channel_mult: tuple, num_res_blocks: int, attn_levels: tuple
 ) -> list[int]:
     """Predicted per-attention-call sequence lengths over one UNet pass
     (down -> mid -> up): the analytic counterpart of the Fig. 7 U-shape."""
-    seqs = []
-    hw = latent_hw
-    # down
-    for level in range(len(channel_mult)):
-        if level in attn_levels:
-            seqs += [hw * hw] * num_res_blocks
-        if level != len(channel_mult) - 1:
-            hw //= 2
-    # mid
-    seqs.append(hw * hw)
-    # up
-    for level in reversed(range(len(channel_mult))):
-        if level in attn_levels:
-            seqs += [hw * hw] * (num_res_blocks + 1)
-        if level != 0:
-            hw *= 2
-    return seqs
+    return unet_block_profile(
+        latent_hw, channel_mult, num_res_blocks, attn_levels,
+        lambda hw, mult, attn: hw * hw if attn else None)

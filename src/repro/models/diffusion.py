@@ -44,6 +44,41 @@ def ddim_step(x, eps, a_t, a_prev):
     return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1.0 - a_prev) * eps
 
 
+def ddim_range(eps_fn, z, total_steps, start, stop):
+    """Run DDIM step indices ``[start, stop)`` of a ``total_steps`` schedule.
+
+    ``eps_fn(z, t)`` predicts noise at (int32 scalar) train timestep ``t``.
+    Splitting one denoise schedule across several calls is what lets a
+    cascade stage hand a partially-denoised latent to the next stage (e.g.
+    TTV keyframe denoise -> temporal refinement).  Under an active trace the
+    single-step events are scaled by ``stop - start`` instead of tracing the
+    loop (every step executes the identical graph).
+    """
+    alphas = ddpm_alphas()
+    ts = jnp.linspace(999, 0, total_steps).astype(jnp.int32)
+
+    if tracer.active():
+        from repro.core.tracer import _traces
+
+        tr = _traces()[-1]
+        t0 = len(tr.events)
+        eps = eps_fn(z, ts[start])
+        for i in range(t0, len(tr.events)):
+            tr.events[i] = tr.events[i].scaled(stop - start)
+        return ddim_step(z, eps, alphas[ts[start]], 1.0)
+
+    def body(i, z):
+        t = ts[i]
+        a_prev = jnp.where(
+            i + 1 < total_steps,
+            alphas[ts[jnp.minimum(i + 1, total_steps - 1)]], 1.0,
+        )
+        eps = eps_fn(z, t)
+        return ddim_step(z, eps, alphas[t], a_prev)
+
+    return jax.lax.fori_loop(start, stop, body, z)
+
+
 # ---------------------------------------------------------------------------
 # Configs
 # ---------------------------------------------------------------------------
@@ -130,13 +165,11 @@ class DiffusionPipeline(Module):
             return self.text_encoder(params["text"], tokens, impl=impl)
 
     def denoise_loop(self, params_unet, unet: UNet2D, z, ctx, steps, *,
-                     cond=None, impl="auto"):
+                     cond=None, impl="auto", start=0, stop=None):
         """DDIM loop.  ``cond`` (SR stages: the upsampled low-res image) is
-        concatenated on channels at every step but not denoised.  Under an
-        active trace the single-step events are scaled by ``steps`` instead
-        of tracing the loop (every step executes the identical graph)."""
-        alphas = ddpm_alphas()
-        ts = jnp.linspace(999, 0, steps).astype(jnp.int32)
+        concatenated on channels at every step but not denoised.  ``start``/
+        ``stop`` select a sub-range of the ``steps``-long schedule (cascade
+        stages resume a partially-denoised latent)."""
 
         def unet_eps(z, t_scalar):
             inp = z if cond is None else jnp.concatenate([z, cond], axis=-1)
@@ -144,27 +177,8 @@ class DiffusionPipeline(Module):
                         jnp.full((z.shape[0],), t_scalar, jnp.float32), ctx,
                         impl=impl)
 
-        if tracer.active():
-            # record one step's events, scale by step count
-            from repro.core.tracer import _traces
-
-            tr = _traces()[-1]
-            t0 = len(tr.events)
-            eps = unet_eps(z, 999.0)
-            for i in range(t0, len(tr.events)):
-                tr.events[i] = tr.events[i].scaled(steps)
-            return ddim_step(z, eps, alphas[999], 1.0)
-
-        def body(i, z):
-            t = ts[i]
-            a_t = alphas[t]
-            a_prev = jnp.where(
-                i + 1 < steps, alphas[ts[jnp.minimum(i + 1, steps - 1)]], 1.0
-            )
-            eps = unet_eps(z, t)
-            return ddim_step(z, eps, a_t, a_prev)
-
-        return jax.lax.fori_loop(0, steps, body, z)
+        return ddim_range(unet_eps, z, steps, start,
+                          steps if stop is None else stop)
 
     def sample(self, params, tokens, key, *, impl="auto", return_latents=False):
         """Full TTI inference: text -> denoise -> decode (paper Fig. 2)."""

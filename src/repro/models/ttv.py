@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import tracer
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.models.diffusion import DiffusionConfig, DiffusionPipeline, ddpm_alphas, ddim_step
+from repro.models.diffusion import ddim_range, ddpm_alphas
 from repro.models.layers.basic import Dense, Embedding, nbytes
 from repro.models.layers.conv import TemporalConv1D
 from repro.models.layers.norms import LayerNorm
@@ -223,31 +223,14 @@ class MakeAVideoPipeline(Module):
         z = jax.random.normal(
             key, (B, cfg.frames, hw, hw, cfg.unet.in_channels), cfg.dtype
         )
-        alphas = ddpm_alphas()
+
+        def video_eps(z, t):
+            return self.video_unet(params["vunet"], z,
+                                   jnp.full((B,), t, jnp.float32), ctx,
+                                   impl=impl)
+
         steps = cfg.denoise_steps
-        ts = jnp.linspace(999, 0, steps).astype(jnp.int32)
-
-        if tracer.active():
-            from repro.core.tracer import _traces
-
-            tr = _traces()[-1]
-            t0 = len(tr.events)
-            eps = self.video_unet(params["vunet"], z,
-                                  jnp.full((B,), 999.0), ctx, impl=impl)
-            for i in range(t0, len(tr.events)):
-                tr.events[i] = tr.events[i].scaled(steps)
-            return ddim_step(z, eps, alphas[999], 1.0)
-
-        def body(i, z):
-            t = ts[i]
-            eps = self.video_unet(params["vunet"], z,
-                                  jnp.full((B,), t, jnp.float32), ctx, impl=impl)
-            a_prev = jnp.where(
-                i + 1 < steps, alphas[ts[jnp.minimum(i + 1, steps - 1)]], 1.0
-            )
-            return ddim_step(z, eps, alphas[t], a_prev)
-
-        return jax.lax.fori_loop(0, steps, body, z)
+        return ddim_range(video_eps, z, steps, 0, steps)
 
 
 # ---------------------------------------------------------------------------
@@ -395,12 +378,17 @@ class PhenakiModel(Module):
         return jnp.sum((logz - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
 
     def sample(self, params, text_tokens, key, *, impl="auto"):
-        c = self.cfg
-        B = text_tokens.shape[0]
-        S = c.frames * c.tokens_per_frame
         with tracer.scope("text_encoder"):
             ctx = self.text_encoder(params["text"], text_tokens, impl=impl)
             ctx = self._ctx_proj()(params["ctx_proj"], ctx)
+        return self.decode_tokens(params, ctx, key, impl=impl)
+
+    def decode_tokens(self, params, ctx, key, *, impl="auto"):
+        """MaskGit-style parallel decode from a precomputed text context —
+        the cascade ``parallel_decode`` stage entry point."""
+        c = self.cfg
+        B = ctx.shape[0]
+        S = c.frames * c.tokens_per_frame
         tokens = jnp.full((B, S), self.mask_token, jnp.int32)
         steps = c.parallel_steps
 

@@ -1,0 +1,38 @@
+"""Cascade pipeline executor: stage-level serving for multi-stage inference.
+
+Turns each workload's ``CostDescriptor.stages`` into an executable pipeline
+of per-stage executors with bounded latent-handoff queues and cross-request
+stage-level batching (paper §IV-C / §V-A).  ``ServeEngine(route="cascade")``
+is the serving entry point; this package is the machinery."""
+
+from repro.pipeline.cascade import (
+    DISPATCH_OVERHEAD_FRAC,
+    CascadePipeline,
+    stage_batch_sizes,
+)
+from repro.pipeline.stage import (
+    StageBuffer,
+    StageExecutor,
+    StageTask,
+    mean_demand,
+    split_state,
+    stack_states,
+    stage_unit_cost,
+    state_nbytes,
+    state_signature,
+)
+
+__all__ = [
+    "CascadePipeline",
+    "DISPATCH_OVERHEAD_FRAC",
+    "StageBuffer",
+    "StageExecutor",
+    "StageTask",
+    "mean_demand",
+    "split_state",
+    "stack_states",
+    "stage_batch_sizes",
+    "stage_unit_cost",
+    "state_nbytes",
+    "state_signature",
+]

@@ -1,0 +1,177 @@
+"""Stage-level execution primitives for the cascade pipeline.
+
+A :class:`StageExecutor` owns one ``CostDescriptor`` stage of one workload:
+its own compiled shape (requests are grouped by state signature, so every
+batch it runs is shape-homogeneous), its own batch size (derived from the
+stage's HBM demand — the seq-256 base denoiser batches wider than the
+seq-4096 SR stage), and its own ``impl=`` tier.  :class:`StageBuffer` is the
+bounded inter-stage latent handoff queue; executors apply backpressure by
+never popping more work than the downstream buffer has room for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Per-request state views
+# ---------------------------------------------------------------------------
+
+
+def stack_states(states: list) -> Any:
+    """Per-request (unbatched) state dicts -> one batched state pytree."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def split_state(state: Any, n: int) -> list:
+    """Batched state pytree -> n per-request (unbatched) views."""
+    return [jax.tree.map(lambda x: x[i], state) for i in range(n)]
+
+
+def state_signature(state: Any) -> tuple:
+    """Hashable (structure, shapes, dtypes) key: states with equal
+    signatures stack into one compiled shape."""
+    leaves, treedef = jax.tree.flatten(state)
+    return (treedef,
+            tuple((tuple(np.shape(x)), jnp.asarray(x).dtype.name)
+                  for x in leaves))
+
+
+def state_nbytes(state: Any) -> int:
+    """Total bytes of all arrays in a state — the latent handoff payload."""
+    return int(sum(np.prod(np.shape(x)) * jnp.asarray(x).dtype.itemsize
+                   for x in jax.tree.leaves(state)))
+
+
+@dataclasses.dataclass
+class StageTask:
+    """One request's state parked between stages."""
+
+    rid: int
+    state: dict
+    group: tuple = ()  # (signature, workload group key) for batching
+
+
+# ---------------------------------------------------------------------------
+# Bounded handoff buffer
+# ---------------------------------------------------------------------------
+
+
+class StageBuffer:
+    """Bounded FIFO of :class:`StageTask` between two stages.
+
+    ``capacity=None`` makes it unbounded (the admission queue; everywhere
+    else the bound is what turns the executor chain into a backpressured
+    pipeline instead of an unbounded fan-in)."""
+
+    def __init__(self, name: str, capacity: int | None = None):
+        self.name = name
+        self.capacity = capacity
+        self._q: deque[StageTask] = deque()
+        self.occupancy: list[int] = []  # sampled once per pipeline tick
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def room(self) -> int:
+        if self.capacity is None:
+            return 1 << 30
+        return max(0, self.capacity - len(self._q))
+
+    def push(self, task: StageTask) -> bool:
+        if self.room() <= 0:
+            return False
+        self._q.append(task)
+        return True
+
+    def pop_group(self, max_n: int) -> list[StageTask]:
+        """Pop up to ``max_n`` tasks sharing the head task's group key
+        (FIFO order preserved for the rest)."""
+        if not self._q or max_n <= 0:
+            return []
+        head = self._q[0].group
+        taken: list[StageTask] = []
+        rest: deque[StageTask] = deque()
+        while self._q:
+            t = self._q.popleft()
+            if len(taken) < max_n and t.group == head:
+                taken.append(t)
+            else:
+                rest.append(t)
+        self._q = rest
+        return taken
+
+    def sample_occupancy(self) -> None:
+        self.occupancy.append(len(self._q))
+
+
+# ---------------------------------------------------------------------------
+# Stage executor
+# ---------------------------------------------------------------------------
+
+
+def mean_demand(stage) -> float:
+    """Stage's mean per-tick relative HBM demand (flat seq_len fallback)."""
+    prof = list(stage.demand) if stage.demand else [stage.seq_len]
+    return float(sum(prof)) / max(len(prof), 1)
+
+
+def stage_unit_cost(stage) -> float:
+    """Modeled cost of pushing ONE request through the whole stage (all its
+    iterative steps), in relative HBM-demand units."""
+    return stage.steps * mean_demand(stage)
+
+
+class StageExecutor:
+    """Runs one workload stage over shape-homogeneous request batches."""
+
+    def __init__(self, workload, stage, *, impl: str = "auto",
+                 max_batch: int = 4):
+        self.workload = workload
+        self.stage = stage
+        self.impl = impl
+        self.max_batch = max_batch
+        # -- stats ----------------------------------------------------------
+        self.batches = 0
+        self.items = 0
+        self.exec_s = 0.0
+        self.batch_sizes: list[int] = []
+
+    @property
+    def name(self) -> str:
+        return self.stage.name
+
+    def run_batch(self, params, tasks: list[StageTask], key) -> list[StageTask]:
+        """Execute the stage over ``tasks`` as one batch; returns the tasks
+        with their post-stage states."""
+        batched = stack_states([t.state for t in tasks])
+        t0 = time.perf_counter()
+        new = self.workload.run_stage(params, self.stage, batched, key,
+                                      impl=self.impl)
+        new = jax.block_until_ready(new)
+        self.exec_s += time.perf_counter() - t0
+        self.batches += 1
+        self.items += len(tasks)
+        self.batch_sizes.append(len(tasks))
+        states = split_state(new, len(tasks))
+        return [dataclasses.replace(t, state=s)
+                for t, s in zip(tasks, states)]
+
+    def summary(self) -> dict:
+        return {
+            "batches": self.batches,
+            "items": self.items,
+            "exec_s": self.exec_s,
+            "mean_batch": (self.items / self.batches) if self.batches else 0.0,
+            "max_batch": self.max_batch,
+            "impl": self.impl,
+            "throughput_rps": (self.items / self.exec_s) if self.exec_s else 0.0,
+        }

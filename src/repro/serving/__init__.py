@@ -2,6 +2,7 @@ from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
     Request,
+    bucket_of,
 )
 from repro.serving.engine import LMServeEngine, ServeConfig, ServeEngine
 
@@ -9,6 +10,7 @@ __all__ = [
     "BucketedScheduler",
     "DenoisePodScheduler",
     "Request",
+    "bucket_of",
     "LMServeEngine",
     "ServeConfig",
     "ServeEngine",

@@ -12,6 +12,15 @@ One ``submit/step/run`` surface for every suite model:
     while ``DenoisePodScheduler`` staggers the pod's step indices (paper
     §V-A) — the resulting ``bandwidth_profile`` (aligned vs staggered HBM
     peak) is reported in ``stats``.
+  * **Cascade route** (``ServeConfig(route="cascade")``, any workload): pods
+    feed ``repro.pipeline.CascadePipeline``, which executes the workload's
+    ``CostDescriptor.stages`` as a stage-level pipeline — cross-request
+    batching per stage, bounded latent-handoff queues, per-stage throughput
+    / queue occupancy / aligned-vs-pipelined HBM-demand profile in
+    ``stats["cascade"]``.
+
+Every route threads ``ServeConfig.impl`` down to ``generate``/``run_stage``
+and reports per-tier served throughput in ``stats["tier_throughput"]``.
 
 Runs the reduced configs on CPU (tests/examples) and the full configs on the
 production mesh via the same code path.
@@ -27,10 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.pipeline import CascadePipeline
 from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
     Request,
+    bucket_of,
 )
 from repro.workload import GenerativeWorkload, workload_for
 
@@ -43,6 +54,9 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     pod_size: int = 0  # 0 -> max_batch
     seed: int = 0
+    impl: str = "auto"  # kernel tier threaded down to generate/run_stage
+    route: str = "auto"  # "auto" (workload default) | "cascade"
+    queue_capacity: int = 8  # cascade inter-stage handoff buffer depth
 
     @property
     def resolved_pod_size(self) -> int:
@@ -61,14 +75,36 @@ class ServeEngine:
         self.params = params
         self.serve_cfg = serve_cfg
         self.cost = workload.cost_descriptor()
-        self.stats: dict = {"requests": 0}
+        self.route = (workload.route if serve_cfg.route == "auto"
+                      else serve_cfg.route)
+        if self.route not in ("lm", "pod", "cascade"):
+            raise ValueError(f"unknown route {self.route!r}")
+        self.stats: dict = {"requests": 0, "impl": serve_cfg.impl,
+                            "tier_throughput": {}}
+        self.pipeline = None
 
-        if workload.route == "lm":
+        if self.route == "cascade":
+            # DenoisePodScheduler-staggered pods feed the stage pipeline:
+            # admission stays pod-based (the §V-A stagger report is still
+            # meaningful per pod), execution is stage-batched across pods.
+            self.scheduler = DenoisePodScheduler(
+                pod_size=serve_cfg.resolved_pod_size,
+                total_steps=self.cost.iterative_steps(),
+            )
+            self.pipeline = CascadePipeline(
+                workload, params, impl=serve_cfg.impl,
+                pod_size=serve_cfg.resolved_pod_size,
+                queue_capacity=serve_cfg.queue_capacity,
+                seed=serve_cfg.seed,
+            )
+            self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[],
+                              cascade={})
+        elif self.route == "lm":
             self.scheduler = BucketedScheduler(serve_cfg.buckets,
                                                serve_cfg.max_batch)
             self._decode_jit = jax.jit(
                 lambda p, tok, caches, cur: self.model.decode_step(
-                    p, tok, caches, cur)
+                    p, tok, caches, cur, impl=serve_cfg.impl)
             )
             self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
                               padding_waste=[])
@@ -80,13 +116,21 @@ class ServeEngine:
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[])
         self._pod_index = 0
 
+    def _record_tier(self, n_done: int, wall_s: float) -> None:
+        """Per-``impl``-tier served-request throughput (ROADMAP open item)."""
+        t = self.stats["tier_throughput"].setdefault(
+            self.serve_cfg.impl, {"requests": 0, "wall_s": 0.0, "rps": 0.0})
+        t["requests"] += n_done
+        t["wall_s"] += wall_s
+        t["rps"] = t["requests"] / t["wall_s"] if t["wall_s"] else 0.0
+
     # -- submission ----------------------------------------------------------
 
     def submit(self, rid: int, tokens, max_new_tokens: int = 0) -> None:
         """Admit one request: ``tokens`` are the prompt/conditioning ids."""
         req = self.workload.prepare_request(rid, tokens,
                                             max_new_tokens=max_new_tokens)
-        if self.workload.route == "lm":
+        if self.workload.route == "lm":  # lm + cascaded-lm routes alike
             limit = max(self.serve_cfg.buckets)
             if req.prompt_len > limit:
                 raise ValueError(
@@ -110,6 +154,7 @@ class ServeEngine:
         return toks
 
     def _step_lm(self) -> list[tuple[int, Any]]:
+        t_step = time.perf_counter()
         bucket, batch = self.scheduler.next_batch()
         if not batch:
             return []
@@ -120,7 +165,8 @@ class ServeEngine:
         cap = bucket + max_new
 
         t0 = time.perf_counter()
-        logits, caches, ctx = self.model.prefill(self.params, toks, max_len=cap)
+        logits, caches, ctx = self.model.prefill(
+            self.params, toks, max_len=cap, impl=self.serve_cfg.impl)
         self.stats["prefill_s"] += time.perf_counter() - t0
 
         # NOTE: prompts are right-padded to the bucket; decode starts at the
@@ -138,6 +184,7 @@ class ServeEngine:
             cur = cur + 1
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["tokens"] += max_new * len(batch)
+        self._record_tier(len(batch), time.perf_counter() - t_step)
         return [(r.rid, out[i][: r.max_new_tokens]) for i, r in enumerate(batch)]
 
     # -- pod route -----------------------------------------------------------
@@ -159,23 +206,69 @@ class ServeEngine:
             jax.random.PRNGKey(self.serve_cfg.seed), self._pod_index)
         self._pod_index += 1
         t0 = time.perf_counter()
-        out = self.workload.generate(self.params, toks, key)
+        out = self.workload.generate(self.params, toks, key,
+                                     impl=self.serve_cfg.impl)
         out = jax.block_until_ready(out)
-        self.stats["generate_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats["generate_s"] += dt
         self.stats["pods"] += 1
+        self._record_tier(len(pod), dt)
         return [(r.rid, np.asarray(out[i])) for i, r in enumerate(pod)]
+
+    # -- cascade route -------------------------------------------------------
+
+    def _admit_cascade_pods(self) -> None:
+        """Drain the pod scheduler into the stage pipeline.  The stagger
+        schedule (§V-A) is recorded per pod; inside the pipeline requests
+        from all admitted pods batch together per stage."""
+        while self.scheduler.pending():
+            pod = self.scheduler.next_pod()
+            if not pod:
+                break
+            schedule = self.scheduler.schedule(pod)
+            self.stats["bandwidth_profile"].append(
+                DenoisePodScheduler.bandwidth_profile(
+                    self.cost.step_demands(), schedule))
+            self.stats["pods"] += 1
+            for r in pod:
+                width = min(bucket_of(r.prompt_len, self.serve_cfg.buckets),
+                            self.workload.max_prompt_len)
+                width = max(width, r.prompt_len)
+                toks = np.zeros(width, np.int32)
+                toks[: r.prompt_len] = np.asarray(r.state["prompt"])
+                self.pipeline.submit(r.rid, toks,
+                                     max_new_tokens=r.max_new_tokens)
+
+    def _step_cascade(self) -> list[tuple[int, Any]]:
+        self._admit_cascade_pods()
+        t0 = time.perf_counter()
+        done = self.pipeline.tick()
+        dt = time.perf_counter() - t0
+        self.stats["generate_s"] += dt
+        if not self.pending():
+            # summary walks the full dispatch/occupancy logs — refresh it
+            # once the pipeline drains, not every tick (O(ticks^2) otherwise)
+            self.stats["cascade"] = self.pipeline.summary()
+        self._record_tier(len(done), dt)
+        return [(rid, np.asarray(out)) for rid, out in done]
 
     # -- unified loop --------------------------------------------------------
 
     def step(self) -> list[tuple[int, Any]]:
-        """Serve one scheduled batch/pod to completion; returns (rid, out)."""
-        if self.workload.route == "lm":
+        """Serve one scheduled batch/pod/pipeline tick; returns (rid, out)."""
+        if self.route == "cascade":
+            return self._step_cascade()
+        if self.route == "lm":
             return self._step_lm()
         return self._step_pod()
 
+    def pending(self) -> int:
+        return self.scheduler.pending() + (
+            self.pipeline.pending() if self.pipeline is not None else 0)
+
     def run(self) -> dict:
         results = {}
-        while self.scheduler.pending():
+        while self.pending():
             for rid, out in self.step():
                 results[rid] = out
         return results

@@ -87,9 +87,11 @@ class DenoisePodScheduler:
     """
 
     def __init__(self, pod_size: int = 4, total_steps: int = 50):
+        if total_steps < 1:
+            raise ValueError(f"total_steps must be >= 1, got {total_steps}")
         self.pod_size = pod_size
         self.total_steps = total_steps
-        self.pods: list[list[Request]] = []
+        self.pods: deque[list[Request]] = deque()
         self._open: list[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -111,14 +113,19 @@ class DenoisePodScheduler:
         that remains)."""
         if not self.pods:
             self.flush()
-        return self.pods.pop(0) if self.pods else []
+        return self.pods.popleft() if self.pods else []
 
     def schedule(self, pod: list) -> list[list[int]]:
-        """Per-tick denoise-step indices, staggered."""
-        k = max(1, self.total_steps // max(len(pod), 1))
+        """Per-tick denoise-step indices, staggered.
+
+        Offsets spread evenly over the step range, so a pod larger than
+        ``total_steps`` degrades gracefully to near-uniform multiplicity
+        per offset instead of silently collapsing to stagger 1."""
+        n = max(len(pod), 1)
+        offsets = [(i * self.total_steps) // n for i in range(n)]
         ticks = []
         for t in range(self.total_steps):
-            ticks.append([(t + i * k) % self.total_steps for i in range(len(pod))])
+            ticks.append([(t + off) % self.total_steps for off in offsets])
         return ticks
 
     @staticmethod

@@ -66,6 +66,26 @@ class ARImageWorkload(GenerativeWorkload):
             ),
         )
 
+    def run_stage(self, params, stage, state, key, *, impl="auto"):
+        model = self.model
+        if stage.name == "text_encoder":
+            with tracer.scope("text_encoder"):
+                ctx = model.text_encoder(params["text"], state["tokens"],
+                                         impl=impl)
+                ctx = model._ctx_proj()(params["ctx_proj"], ctx)
+            return {"ctx": ctx}
+        if stage.name == "parallel_decode":
+            return {"img_tokens": model.sample_parallel(params, state["ctx"],
+                                                        key, impl=impl)}
+        if stage.name == "ar_decode":
+            return {"img_tokens": model.sample_ar(params, state["ctx"], key,
+                                                  impl=impl)}
+        if stage.name == "vq_decoder":
+            with tracer.scope("vq_decoder"):
+                return {"out": model.vq(params["vq"], state["img_tokens"],
+                                        impl=impl)}
+        raise ValueError(f"unknown AR-image stage {stage.name!r}")
+
     def trace_events(self, impl: str = "auto") -> list:
         cfg = self.cfg
         if cfg.decode == "parallel":

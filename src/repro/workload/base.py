@@ -156,6 +156,44 @@ class GenerativeWorkload:
         """Batched full-pipeline inference: (B, S) tokens -> output."""
         return self.model.sample(params, tokens, key, impl=impl)
 
+    # -- cascade stage protocol ----------------------------------------------
+    #
+    # ``cost_descriptor().stages`` is not just a cost annotation: each Stage
+    # is *executable* through ``run_stage``, which is what the cascade
+    # pipeline (``repro.pipeline``) schedules.  State is a dict pytree of
+    # arrays whose leading axis is the batch; the pipeline stacks/splits the
+    # per-request views on axis 0, so every entry a stage stores must carry
+    # the batch axis first (scalars go in as shape-() arrays, stacked to
+    # (B,)).  Diffusion splits base/SR stages, TTV splits keyframe/temporal
+    # denoise, LM degenerates to prefill+decode — one machinery for all.
+
+    def init_stage_state(self, tokens, *, max_new_tokens: int = 0) -> dict:
+        """Per-request state entering the first pipeline stage (unbatched:
+        no leading batch axis; the pipeline stacks requests per stage)."""
+        import jax.numpy as jnp
+
+        del max_new_tokens  # LM workloads keep it; pod workloads don't
+        return {"tokens": jnp.asarray(tokens, jnp.int32)}
+
+    def run_stage(self, params, stage: Stage, state: dict, key, *,
+                  impl="auto") -> dict:
+        """Execute one descriptor ``stage`` over batched ``state`` -> new
+        batched state.  The final stage must store the result under
+        ``"out"`` (or override ``stage_output``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement run_stage for "
+            f"cascade serving (stage {stage.name!r})")
+
+    def stage_group_key(self, stage: Stage, state: dict):
+        """Extra batch-compatibility key for ``stage`` over an unbatched
+        ``state`` (beyond array shapes/dtypes) — e.g. LM decode may only
+        merge requests at the same cache position.  None = shape-only."""
+        return None
+
+    def stage_output(self, state: dict):
+        """Final per-request output from a completed (unbatched) state."""
+        return state["out"]
+
     # -- characterization ----------------------------------------------------
 
     def trace_inputs(self):

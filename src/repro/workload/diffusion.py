@@ -26,12 +26,19 @@ REDUCED_TEXT = TextEncoderConfig(vocab=512, max_len=16, n_layers=2,
 
 
 def unet_demand(latent_hw: int, unet_cfg) -> tuple:
-    """Per-tick relative HBM demand over one UNet pass (Fig. 7 U-shape)."""
-    prof = analytical.unet_seq_profile(
+    """Per-tick relative HBM demand over one UNet pass (Fig. 7 U-shape).
+
+    Serving-facing: every ResBlock reads+writes its ``hw^2 x channels``
+    activations (the conv traffic floor — SR UNets trade attention for
+    convolution but their resolution still dominates HBM, paper C1/C6);
+    attention levels pay one extra activation round trip (qkv/out).  The
+    attention-only sequence-length view of the same block walk is
+    ``core.analytical.unet_seq_profile`` (Fig. 7/8 characterization).
+    """
+    return tuple(analytical.unet_block_profile(
         latent_hw, unet_cfg.channel_mult, unet_cfg.num_res_blocks,
         unet_cfg.attn_levels,
-    )
-    return tuple(prof) if prof else (latent_hw * latent_hw,)
+        lambda hw, mult, attn: hw * hw * mult * (2.0 if attn else 1.0)))
 
 
 @register_workload(DiffusionConfig)
@@ -88,3 +95,45 @@ class DiffusionWorkload(GenerativeWorkload):
             stages.append(Stage("vae", 1, cfg.image_size ** 2))
         return CostDescriptor(arch=cfg.name, route=self.route,
                               stages=tuple(stages))
+
+    def run_stage(self, params, stage, state, key, *, impl="auto"):
+        import jax
+        import jax.numpy as jnp
+
+        model, cfg = self.model, self.cfg
+        if stage.name == "text_encoder":
+            ctx = model.encode_text(params, state["tokens"], impl=impl)
+            return {"ctx": ctx}
+        if stage.name == "denoise":
+            ctx = state["ctx"]
+            B, hw = ctx.shape[0], cfg.latent_size
+            z = jax.random.normal(key, (B, hw, hw, cfg.unet.in_channels),
+                                  cfg.unet.dtype)
+            z = model.denoise_loop(params["unet"], model.unet, z, ctx,
+                                   stage.steps, impl=impl)
+            if cfg.kind == "latent":
+                return {"z": z} if cfg.vae is not None else {"out": z}
+            return {"ctx": ctx, "img": z}
+        if stage.name.startswith("sr"):
+            i = int(stage.name[2:])
+            s = cfg.sr_stages[i]
+            img, ctx = state["img"], state["ctx"]
+            B, H, W, C = img.shape
+            up = jax.image.resize(img, (B, s.out_size, s.out_size, C),
+                                  "bilinear")
+            noise = jax.random.normal(jax.random.fold_in(key, i),
+                                      (B, s.out_size, s.out_size, 3),
+                                      img.dtype)
+            img = model.denoise_loop(params[f"sr{i}"], model.sr_unets[i],
+                                     noise, ctx, s.steps, cond=up, impl=impl)
+            last = i == len(cfg.sr_stages) - 1
+            return {"out": img} if last else {"ctx": ctx, "img": img}
+        if stage.name == "vae":
+            return {"out": model.vae(params["vae"], state["z"], impl=impl)}
+        raise ValueError(f"unknown diffusion stage {stage.name!r}")
+
+    def stage_output(self, state):
+        for k in ("out", "img", "z"):
+            if k in state:
+                return state[k]
+        raise KeyError("no output in cascade state")

@@ -63,6 +63,72 @@ class LMWorkload(GenerativeWorkload):
             ),
         )
 
+    # -- cascade stages: the LM path degenerates to a 2-stage pipeline -------
+
+    def init_stage_state(self, tokens, *, max_new_tokens: int = 0) -> dict:
+        return {"tokens": jnp.asarray(tokens, jnp.int32),
+                "max_new": jnp.int32(max_new_tokens)}
+
+    def run_stage(self, params, stage, state, key, *, impl="auto"):
+        del key  # greedy decode is deterministic
+        model = self.model
+        if stage.name == "prefill":
+            toks = state["tokens"]  # (B, S) bucket-padded
+            B, S = toks.shape
+            cap = S + int(jnp.max(state["max_new"]))
+            logits, caches, _ = model.prefill(params, toks, impl=impl,
+                                              max_len=cap)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            return {
+                "max_new": state["max_new"],
+                "next_tok": nxt,
+                # decode starts at the bucket boundary (same §V-B trade as
+                # the lm route); caches re-laid batch-axis-first so the
+                # pipeline can split/stack per-request KV state on axis 0
+                "cur": jnp.full((B,), S, jnp.int32),
+                "caches": jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0),
+                                       caches),
+            }
+        if stage.name == "decode":
+            caches = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1),
+                                  state["caches"])
+            nxt = state["next_tok"]
+            B = nxt.shape[0]
+            cur = jnp.int32(int(state["cur"][0]))
+            steps = int(jnp.max(state["max_new"]))
+            decode = self._decode_jit()
+            out = []
+            for _ in range(steps):
+                out.append(nxt)
+                logits, caches = decode(params, nxt, caches, cur, impl=impl)
+                nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+                cur = cur + 1
+            tokens = (jnp.concatenate(out, axis=1) if out
+                      else jnp.zeros((B, 0), jnp.int32))
+            return {"max_new": state["max_new"], "out": tokens}
+        raise ValueError(f"unknown LM stage {stage.name!r}")
+
+    def _decode_jit(self):
+        """Jitted decode_step shared across cascade decode batches (one
+        compiled shape per bucket/cap signature, same as the lm route)."""
+        if not hasattr(self, "_decode_jit_fn"):
+            self._decode_jit_fn = jax.jit(
+                lambda p, tok, caches, cur, impl: self.model.decode_step(
+                    p, tok, caches, cur, impl=impl),
+                static_argnames=("impl",))
+        return self._decode_jit_fn
+
+    def stage_group_key(self, stage, state):
+        # decode batches may only merge requests at the same cache position
+        if stage.name == "decode":
+            return int(state["cur"])
+        return None
+
+    def stage_output(self, state):
+        import numpy as np
+
+        return np.asarray(state["out"])[: int(state["max_new"])]
+
     def trace_inputs(self):
         return (jax.ShapeDtypeStruct((TRACE_BATCH, TRACE_PREFILL), jnp.int32),)
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import tracer
 from repro.models.ttv import (
     MakeAVideoPipeline,
     PhenakiConfig,
@@ -46,19 +47,91 @@ class MakeAVideoWorkload(GenerativeWorkload):
             temporal_head_channels=8,
         )
 
+    # Temporal attn/conv add one extra q/k/v/out round trip over the spatial
+    # activations at every attention site — modeled as a flat traffic factor
+    # on the temporal-refinement stage's demand profile.
+    TEMPORAL_TRAFFIC = 1.5
+
+    def _denoise_split(self) -> tuple[int, int]:
+        """(keyframe, temporal) step counts: the cascade runs the first half
+        of the DDIM schedule spatial-only (per-frame keyframe content), then
+        refines with the temporal layers active (Make-A-Video's spatial->
+        temporal factorization as a serving pipeline).  A 1-step schedule
+        cannot be factorized — it runs as a single temporal stage so the
+        cascade never executes more denoise passes than configured."""
+        steps = self.cfg.denoise_steps
+        if steps < 2:
+            return 0, steps
+        kf = steps // 2
+        return kf, steps - kf
+
     def cost_descriptor(self) -> CostDescriptor:
         cfg = self.cfg
         hw = cfg.image_size // cfg.latent_down
         # frames fold into batch for the spatial UNet: demand scales by F
-        demand = tuple(d * cfg.frames for d in unet_demand(hw, cfg.unet))
-        return CostDescriptor(
-            arch=cfg.name, route=self.route,
-            stages=(
-                Stage("text_encoder", 1, cfg.text.max_len),
-                Stage("denoise", cfg.denoise_steps, cfg.frames * hw * hw,
-                      demand=demand),
-            ),
-        )
+        spatial = tuple(d * cfg.frames for d in unet_demand(hw, cfg.unet))
+        temporal = tuple(d * self.TEMPORAL_TRAFFIC for d in spatial)
+        kf, tp = self._denoise_split()
+        stages = [Stage("text_encoder", 1, cfg.text.max_len)]
+        if kf:
+            stages.append(Stage("keyframe_denoise", kf,
+                                cfg.frames * hw * hw, demand=spatial))
+        stages.append(Stage("temporal_denoise", tp, cfg.frames * hw * hw,
+                            demand=temporal))
+        return CostDescriptor(arch=cfg.name, route=self.route,
+                              stages=tuple(stages))
+
+    def run_stage(self, params, stage, state, key, *, impl="auto"):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.diffusion import ddim_range
+
+        model, cfg = self.model, self.cfg
+        if stage.name == "text_encoder":
+            with tracer.scope("text_encoder"):
+                ctx = model.text_encoder(params["text"], state["tokens"],
+                                         impl=impl)
+            return {"ctx": ctx}
+
+        kf, tp = self._denoise_split()
+        total = kf + tp
+        ctx = state["ctx"]
+        if stage.name == "keyframe_denoise":
+            B, hw = ctx.shape[0], cfg.image_size // cfg.latent_down
+            z = jax.random.normal(
+                key, (B, cfg.frames, hw, hw, cfg.unet.in_channels), cfg.dtype)
+
+            def spatial_eps(z, t):
+                # frames folded into batch; temporal layers inactive
+                Bz, F, H, W, C = z.shape
+                eps = model.video_unet.unet(
+                    params["vunet"]["unet"], z.reshape(Bz * F, H, W, C),
+                    jnp.full((Bz * F,), t, jnp.float32),
+                    jnp.repeat(ctx, F, axis=0), impl=impl)
+                return eps.reshape(Bz, F, H, W, C)
+
+            with tracer.scope("keyframe_denoise"):
+                z = ddim_range(spatial_eps, z, total, 0, kf)
+            return {"ctx": ctx, "z": z}
+        if stage.name == "temporal_denoise":
+            if kf:
+                z = state["z"]
+            else:  # unfactorized 1-step schedule: no keyframe stage ran
+                B, hw = ctx.shape[0], cfg.image_size // cfg.latent_down
+                z = jax.random.normal(
+                    key, (B, cfg.frames, hw, hw, cfg.unet.in_channels),
+                    cfg.dtype)
+
+            def video_eps(z, t):
+                return model.video_unet(
+                    params["vunet"], z,
+                    jnp.full((z.shape[0],), t, jnp.float32), ctx, impl=impl)
+
+            with tracer.scope("temporal_denoise"):
+                out = ddim_range(video_eps, z, total, kf, total)
+            return {"out": out}
+        raise ValueError(f"unknown TTV stage {stage.name!r}")
 
 
 @register_workload(PhenakiConfig)
@@ -87,3 +160,16 @@ class PhenakiWorkload(GenerativeWorkload):
                 Stage("parallel_decode", cfg.parallel_steps, S, demand=(S,)),
             ),
         )
+
+    def run_stage(self, params, stage, state, key, *, impl="auto"):
+        model = self.model
+        if stage.name == "text_encoder":
+            with tracer.scope("text_encoder"):
+                ctx = model.text_encoder(params["text"], state["tokens"],
+                                         impl=impl)
+                ctx = model._ctx_proj()(params["ctx_proj"], ctx)
+            return {"ctx": ctx}
+        if stage.name == "parallel_decode":
+            return {"out": model.decode_tokens(params, state["ctx"], key,
+                                               impl=impl)}
+        raise ValueError(f"unknown Phenaki stage {stage.name!r}")

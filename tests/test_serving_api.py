@@ -90,6 +90,58 @@ def test_denoise_pod_stagger_reduces_peak_for_nonuniform_demand():
     assert prof["staggered_peak"] < prof["aligned_peak"]
 
 
+@pytest.mark.parametrize("name", SUITE)
+def test_step_demands_shape_and_cascade_ordering(name):
+    """CostDescriptor.step_demands across all eight suite archs: positive
+    demands, tick count monotonic in stage steps, and SR-stage demand above
+    base-stage demand for the cascade models (seq length grows up to 4x
+    across stages, paper §IV-C)."""
+    import dataclasses as dc
+
+    cd = workload_for(get_config(name)).cost_descriptor()
+    demands = cd.step_demands()
+    assert demands and all(d > 0 for d in demands)
+
+    # doubling every stage's step count never shrinks the tick count
+    doubled = dc.replace(
+        cd, stages=tuple(dc.replace(s, steps=s.steps * 2) for s in cd.stages))
+    assert len(doubled.step_demands()) >= len(demands)
+
+    sr = [s for s in cd.stages if s.name.startswith("sr")]
+    if sr:  # cascade models: imagen's SR stages dominate the base denoiser
+        base = next(s for s in cd.stages if s.name == "denoise")
+        assert max(sr[0].demand) > max(base.demand)
+        assert sr[0].seq_len > base.seq_len
+
+
+def test_pod_scheduler_handles_pods_larger_than_total_steps():
+    """Stagger offsets spread evenly instead of silently collapsing to
+    stagger 1 when the pod outnumbers the denoise steps."""
+    sched = DenoisePodScheduler(pod_size=6, total_steps=4)
+    pod = [Request(rid=i, prompt_len=8, denoise_steps=4) for i in range(6)]
+    ticks = sched.schedule(pod)
+    assert len(ticks) == 4 and all(len(t) == 6 for t in ticks)
+    assert all(0 <= s < 4 for t in ticks for s in t)
+    # pigeonhole: multiplicity per step index stays balanced (<= ceil(6/4))
+    for t in ticks:
+        counts = [t.count(v) for v in set(t)]
+        assert max(counts) <= 2
+
+    with pytest.raises(ValueError, match="total_steps"):
+        DenoisePodScheduler(pod_size=2, total_steps=0)
+
+
+def test_pod_scheduler_pops_pods_fifo_from_deque():
+    from collections import deque
+
+    sched = DenoisePodScheduler(pod_size=2, total_steps=8)
+    assert isinstance(sched.pods, deque)
+    for i in range(4):
+        sched.submit(Request(rid=i, prompt_len=8, denoise_steps=8))
+    assert [r.rid for r in sched.next_pod()] == [0, 1]
+    assert [r.rid for r in sched.next_pod()] == [2, 3]
+
+
 def test_pod_scheduler_next_pod_flushes_partial():
     sched = DenoisePodScheduler(pod_size=4, total_steps=8)
     for i in range(6):  # one full pod + one partial

@@ -392,6 +392,63 @@ def bench_cascade() -> list:
 bench_cascade.bench_group = "serving"
 
 
+def bench_online() -> list:
+    """Continuous vs pod admission under online (poisson) arrivals, on the
+    tiny diffusion-SR cascade the acceptance tests pin.
+
+    Both sides serve the identical arrival trace through
+    ``ServeEngine(route="cascade")``; the only difference is the admission
+    policy — ``continuous`` flushes a partial pod after a short arrival-
+    pressure wait so mid-flight requests join partially-drained stage
+    queues, ``pod`` holds partial pods until arrivals fill them (the
+    lockstep-admission baseline).  Rows record served throughput per
+    simulated tick plus the p95 admission-wait and end-to-end tick
+    latencies, and a final row derives the continuous-over-pod latency
+    ratio."""
+    from repro.configs.tiny import TINY_TTI_CASCADE
+    from repro.serving import ArrivalTrace
+    from repro.serving.engine import ServeConfig, ServeEngine
+    from repro.workload import workload_for
+
+    n_req, pod = 8, 2
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    arrivals = ArrivalTrace("poisson", rate=0.6, seed=0).ticks(n_req)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, wl.prompt_vocab, size=int(rng.integers(4, 9)))
+               for _ in range(n_req)]
+
+    rows, e2e_p95 = [], {}
+    for admission in ("pod", "continuous"):
+        eng = ServeEngine(wl, params,
+                          ServeConfig(max_batch=pod, buckets=(8,),
+                                      route="cascade", admission=admission))
+        for rid, (p, tick) in enumerate(zip(prompts, arrivals)):
+            eng.submit(rid, p, arrival_tick=tick)
+        t0 = time.perf_counter()
+        n = len(eng.run())
+        dt = time.perf_counter() - t0
+        c = eng.stats["cascade"]
+        adm, e2e = c["admission"]["wait_ticks"], c["request_latency_ticks"]
+        e2e_p95[admission] = e2e["p95"]
+        rows.append((
+            f"online/{wl.cfg.name}/{admission}", dt / n * 1e6,
+            f"throughput_per_tick={n / c['ticks']:.3f}req;"
+            f"ticks={c['ticks']};"
+            f"admission_wait_p95={adm['p95']:.1f}ticks;"
+            f"e2e_p50={e2e['p50']:.1f}ticks;e2e_p95={e2e['p95']:.1f}ticks",
+        ))
+    rows.append((
+        f"online/{wl.cfg.name}/continuous_vs_pod", 0.0,
+        f"e2e_p95_ratio={e2e_p95['pod'] / max(e2e_p95['continuous'], 1e-9):.3f}x"
+        f";arrivals=poisson(rate=0.6,n={n_req})",
+    ))
+    return rows
+
+
+bench_online.bench_group = "serving"
+
+
 ALL_BENCHES = [
     bench_roofline_suite,
     bench_operator_breakdown,
@@ -404,4 +461,5 @@ ALL_BENCHES = [
     bench_kernel_wallclock,
     bench_conv_kernel,
     bench_cascade,
+    bench_online,
 ]

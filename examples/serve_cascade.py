@@ -1,10 +1,14 @@
-"""Serve a TTV cascade through ``ServeEngine(route="cascade")``.
+"""Serve a TTV cascade *online* through ``ServeEngine(route="cascade")``.
 
 Make-A-Video's stage structure — text encode, keyframe (spatial) denoise,
 temporal refinement — runs as a stage-level pipeline: requests from
 different users batch together *per stage* (paper §IV-C / §V-A), each stage
-at its own batch size, with bounded latent-handoff queues in between.  The
-same command serves a diffusion SR cascade: swap the arch for "imagen".
+at its own batch size and kernel tier, with bounded latent-handoff queues
+in between.  Requests arrive over a poisson trace and join the
+partially-drained stage queues mid-flight (continuous admission); the
+engine reports per-stage p50/p95 queue-wait tail latency and per-tier
+attribution.  The same command serves a diffusion SR cascade: swap the
+arch for "imagen".
 
     PYTHONPATH=src python examples/serve_cascade.py
 """
@@ -16,6 +20,7 @@ import numpy as np
 
 import repro.configs.suite  # noqa: F401 — registers the paper suite
 from repro.configs import get_config
+from repro.serving import ArrivalTrace
 from repro.serving.engine import ServeConfig, ServeEngine
 from repro.workload import reduced_workload
 
@@ -25,17 +30,21 @@ def main():
     params = workload.init(jax.random.PRNGKey(0))
     engine = ServeEngine(
         workload, params,
-        ServeConfig(max_batch=2, buckets=(8, 16), route="cascade"))
+        ServeConfig(max_batch=2, buckets=(8, 16), route="cascade",
+                    stage_impl={"text_encoder": "naive"}))
 
     cd = workload.cost_descriptor()
     print("cascade: " + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
 
     rng = np.random.default_rng(0)
     n_requests = 6
+    arrivals = ArrivalTrace("poisson", rate=0.8, seed=0).ticks(n_requests)
+    print(f"poisson arrivals at ticks {arrivals} (continuous admission)")
     t0 = time.perf_counter()
     for rid in range(n_requests):
         plen = int(rng.integers(4, min(workload.max_prompt_len, 12) + 1))
-        engine.submit(rid, rng.integers(0, workload.prompt_vocab, size=plen))
+        engine.submit(rid, rng.integers(0, workload.prompt_vocab, size=plen),
+                      arrival_tick=arrivals[rid])
     results = engine.run()
     dt = time.perf_counter() - t0
 
@@ -43,8 +52,15 @@ def main():
     print(f"served {len(results)} requests in {dt:.2f}s over {c['ticks']} "
           f"ticks (stage concurrency max {c['concurrency']['max']})")
     for name, st in c["stages"].items():
-        print(f"  {name}: {st['items']} items / {st['batches']} batches "
-              f"(mean batch {st['mean_batch']:.1f}) in {st['exec_s']:.2f}s")
+        w = st["queue_wait_ticks"]
+        print(f"  {name} [{st['effective_impl']}]: {st['items']} items / "
+              f"{st['batches']} batches (mean batch {st['mean_batch']:.1f}) "
+              f"in {st['exec_s']:.2f}s | queue wait p50 {w['p50']:.0f} "
+              f"p95 {w['p95']:.0f} ticks")
+    adm, e2e = c["admission"], c["request_latency_ticks"]
+    print(f"admission [{adm['policy']}]: wait p95 "
+          f"{adm['wait_ticks']['p95']:.0f} ticks | e2e p50 {e2e['p50']:.0f} "
+          f"p95 {e2e['p95']:.0f} ticks")
     h = c["hbm"]
     print(f"modeled vs end-to-end lockstep: {h['throughput_gain']:.2f}x "
           f"throughput; HBM peak/mean {h['lockstep']['flatness']:.2f} -> "

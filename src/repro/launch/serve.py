@@ -3,12 +3,17 @@
 LM archs serve through the bucketed prefill+decode path; diffusion / AR-image
 / TTV archs through the staggered denoise-pod path — one engine API for all.
 ``--route cascade`` serves the workload's stage cascade through the
-stage-level pipeline (cross-request per-stage batching, paper §IV-C/§V-A).
+stage-level pipeline (cross-request per-stage batching, paper §IV-C/§V-A);
+``--arrivals`` drives it as an *online* simulation (requests arrive over
+scheduling ticks and join partially-drained stage queues mid-flight), and
+``--stage-impl`` pins individual stages to kernel tiers.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --requests 12
     PYTHONPATH=src python -m repro.launch.serve --arch stable-diffusion \
         --reduced --requests 4 --route cascade
+    PYTHONPATH=src python -m repro.launch.serve --arch imagen --reduced \
+        --route cascade --arrivals poisson --stage-impl sr=pallas
 """
 
 from __future__ import annotations
@@ -21,8 +26,23 @@ import numpy as np
 
 import repro.configs.suite  # noqa: F401 — registers the paper suite
 from repro.configs import get_config, list_configs
+from repro.serving import PATTERNS, ArrivalTrace
 from repro.serving.engine import ServeConfig, ServeEngine
 from repro.workload import reduced_workload, workload_for
+
+
+def parse_stage_impl(spec: str | None) -> dict | None:
+    """``"sr=pallas,text_encoder=naive"`` -> {"sr": "pallas", ...}."""
+    if not spec:
+        return None
+    out = {}
+    for part in spec.split(","):
+        if "=" not in part:
+            raise SystemExit(
+                f"--stage-impl entry {part!r} is not name=tier")
+        name, tier = part.split("=", 1)
+        out[name.strip()] = tier.strip()
+    return out
 
 
 def main():
@@ -37,6 +57,23 @@ def main():
                     help="cascade = stage-level pipeline serving")
     ap.add_argument("--impl", default="auto",
                     help="kernel tier threaded to generate/run_stage")
+    ap.add_argument("--stage-impl", default=None, metavar="NAME=TIER,...",
+                    help="per-cascade-stage tier overrides, matched by exact "
+                         "stage name or prefix (e.g. sr=pallas puts every SR "
+                         "stage on the Pallas kernel; off-TPU it runs the "
+                         "same kernel body in interpret mode)")
+    ap.add_argument("--arrivals", default="none",
+                    choices=("none",) + PATTERNS,
+                    help="online arrival pattern (none = all at tick 0)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="poisson: mean arrivals per scheduling tick")
+    ap.add_argument("--admission", default="continuous",
+                    choices=("continuous", "pod"),
+                    help="continuous = arrival-pressure pod flush; pod = "
+                         "hold partial pods until arrivals fill them")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="LM sampling temperature (0 = greedy)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,17 +83,29 @@ def main():
 
     engine = ServeEngine(workload, params,
                          ServeConfig(pod_size=args.pod_size,
-                                     route=args.route, impl=args.impl))
+                                     route=args.route, impl=args.impl,
+                                     stage_impl=parse_stage_impl(args.stage_impl),
+                                     admission=args.admission,
+                                     temperature=args.temperature,
+                                     seed=args.seed))
     cd = workload.cost_descriptor()
     print(f"arch {cfg.name} | route {engine.route} | stages "
           + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
 
-    rng = np.random.default_rng(0)
+    arrivals = ([0] * args.requests if args.arrivals == "none" else
+                ArrivalTrace(args.arrivals, rate=args.arrival_rate,
+                             seed=args.seed).ticks(args.requests))
+    if args.arrivals != "none":
+        print(f"arrivals {args.arrivals}: ticks "
+              f"{[t if t is not None else 'on-completion' for t in arrivals]}"
+              f" | admission {args.admission}")
+
+    rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for rid in range(args.requests):
         plen = int(rng.integers(4, min(workload.max_prompt_len, 30) + 1))
         prompt = rng.integers(0, workload.prompt_vocab, size=plen)
-        engine.submit(rid, prompt, args.max_new)
+        engine.submit(rid, prompt, args.max_new, arrival_tick=arrivals[rid])
     results = engine.run()
     dt = time.perf_counter() - t0
 
@@ -68,12 +117,24 @@ def main():
         c = s["cascade"]
         print(f"  pipeline: {c['ticks']} ticks, stage concurrency max "
               f"{c['concurrency']['max']} mean {c['concurrency']['mean']:.2f}")
+        adm = c["admission"]
+        print(f"  admission [{adm['policy']}]: wait ticks p50 "
+              f"{adm['wait_ticks']['p50']:.0f} p95 "
+              f"{adm['wait_ticks']['p95']:.0f} | request e2e ticks p50 "
+              f"{c['request_latency_ticks']['p50']:.0f} p95 "
+              f"{c['request_latency_ticks']['p95']:.0f}")
         for name, st in c["stages"].items():
-            q = st["queue"]
-            print(f"  stage {name}: {st['items']} items / {st['batches']} "
-                  f"batches (mean {st['mean_batch']:.1f}, cap "
-                  f"{st['max_batch']}) {st['exec_s']:.2f}s | queue occ mean "
-                  f"{q['mean_occupancy']:.1f} max {q['max_occupancy']}")
+            q, w = st["queue"], st["queue_wait_ticks"]
+            tier = (st["impl"] if st["impl"] == st["effective_impl"]
+                    else f"{st['impl']}->{st['effective_impl']}")
+            print(f"  stage {name} [{tier}]: {st['items']} items / "
+                  f"{st['batches']} batches (mean {st['mean_batch']:.1f}, cap "
+                  f"{st['max_batch']}) {st['exec_s']:.2f}s | queue wait p50 "
+                  f"{w['p50']:.0f} p95 {w['p95']:.0f} ticks, occ max "
+                  f"{q['max_occupancy']}")
+        for tier, t in c["tiers"].items():
+            print(f"  tier {tier}: stages {','.join(t['stages'])} | "
+                  f"{t['items']} items, {t['rps']:.2f} items/s")
         h = c["hbm"]
         print(f"  modeled stage-batched vs lockstep: "
               f"{h['throughput_gain']:.2f}x throughput, HBM flatness "

@@ -8,13 +8,16 @@ is the serving entry point; this package is the machinery."""
 from repro.pipeline.cascade import (
     DISPATCH_OVERHEAD_FRAC,
     CascadePipeline,
+    resolve_stage_impls,
     stage_batch_sizes,
 )
 from repro.pipeline.stage import (
     StageBuffer,
     StageExecutor,
     StageTask,
+    effective_tier,
     mean_demand,
+    percentiles,
     split_state,
     stack_states,
     stage_unit_cost,
@@ -28,7 +31,10 @@ __all__ = [
     "StageBuffer",
     "StageExecutor",
     "StageTask",
+    "effective_tier",
     "mean_demand",
+    "percentiles",
+    "resolve_stage_impls",
     "split_state",
     "stack_states",
     "stage_batch_sizes",

@@ -32,6 +32,7 @@ from repro.pipeline.stage import (
     StageExecutor,
     StageTask,
     mean_demand,
+    percentiles,
     stage_unit_cost,
     state_nbytes,
     state_signature,
@@ -57,11 +58,49 @@ def stage_batch_sizes(stages, pod_size: int, queue_capacity: int) -> list[int]:
     return [max(1, min(cap, int(budget // d))) for d in demands]
 
 
+def resolve_stage_impls(stages, impl: str, stage_impl: dict | None) -> list[str]:
+    """Per-stage kernel tier: ``stage_impl`` overrides the engine-wide
+    ``impl`` default, matched by exact stage name first, then by prefix (so
+    ``{"sr": "pallas"}`` covers ``sr0``/``sr1``...).  Keys matching no stage
+    raise — a typo must not silently serve the default tier."""
+    stage_impl = dict(stage_impl or {})
+    names = [s.name for s in stages]
+    unused = [k for k in stage_impl
+              if not any(n == k or n.startswith(k) for n in names)]
+    if unused:
+        raise ValueError(
+            f"stage_impl keys {sorted(unused)} match no stage "
+            f"(stages: {names})")
+    out = []
+    for name in names:
+        exact = stage_impl.get(name)
+        if exact is not None:
+            out.append(exact)
+            continue
+        prefixes = [k for k in stage_impl if name.startswith(k)]
+        out.append(stage_impl[max(prefixes, key=len)] if prefixes else impl)
+    return out
+
+
 class CascadePipeline:
-    """Drives one workload's stage cascade with cross-request batching."""
+    """Drives one workload's stage cascade with cross-request batching.
+
+    Construction turns ``workload.cost_descriptor().stages`` into a chain
+    of :class:`StageExecutor` joined by bounded :class:`StageBuffer`
+    handoff queues; ``submit`` enqueues a request's initial stage state,
+    and each ``tick()`` is one scheduling round.  Requests may be submitted
+    at any point — mid-flight submissions join the (partially drained)
+    first-stage queue, which is what continuous admission in
+    ``ServeEngine(route="cascade")`` relies on.
+
+    ``stage_impl`` maps stage names (exact or prefix, e.g. ``{"sr":
+    "pallas"}``) to kernel tiers, overriding the engine-wide ``impl`` for
+    those stages; ``temperature`` threads to every ``run_stage`` (only
+    LM-style sampling stages consume it)."""
 
     def __init__(self, workload, params, *, impl: str = "auto",
-                 pod_size: int = 4, queue_capacity: int = 8, seed: int = 0):
+                 pod_size: int = 4, queue_capacity: int = 8, seed: int = 0,
+                 stage_impl: dict | None = None, temperature: float = 0.0):
         self.workload = workload
         self.params = params
         self.impl = impl
@@ -72,9 +111,11 @@ class CascadePipeline:
             raise ValueError("workload has no cost-descriptor stages")
         batches = stage_batch_sizes(self.stages, self.pod_size,
                                     self.queue_capacity)
+        impls = resolve_stage_impls(self.stages, impl, stage_impl)
         self.executors = [
-            StageExecutor(workload, s, impl=impl, max_batch=b)
-            for s, b in zip(self.stages, batches)
+            StageExecutor(workload, s, impl=im, max_batch=b,
+                          temperature=temperature)
+            for s, b, im in zip(self.stages, batches, impls)
         ]
         # buffers[i] feeds stage i; buffers[0] is the (unbounded) admission
         # queue — the serving scheduler is its backpressure
@@ -94,9 +135,12 @@ class CascadePipeline:
     # -- submission ----------------------------------------------------------
 
     def submit(self, rid: int, tokens, max_new_tokens: int = 0) -> None:
+        """Admit one request into the first stage's queue — legal at any
+        tick, including mid-flight while earlier requests occupy deeper
+        stages (continuous admission)."""
         state = self.workload.init_stage_state(
             tokens, max_new_tokens=max_new_tokens)
-        self.buffers[0].push(self._task(rid, state, 0))
+        self.buffers[0].push(self._task(rid, state, 0), now=self.ticks)
         self.submitted += 1
 
     def _task(self, rid: int, state: dict, stage_idx: int) -> StageTask:
@@ -120,7 +164,7 @@ class CascadePipeline:
             ex, buf = self.executors[i], self.buffers[i]
             out_buf = self.buffers[i + 1] if i + 1 < len(self.buffers) else None
             room = out_buf.room() if out_buf is not None else ex.max_batch
-            tasks = buf.pop_group(min(ex.max_batch, room))
+            tasks = buf.pop_group(min(ex.max_batch, room), now=self.ticks)
             if not tasks:
                 continue
             key = jax.random.fold_in(self._key, self._nkey)
@@ -135,7 +179,8 @@ class CascadePipeline:
             else:
                 self._handoff(i, new_tasks)
                 for t in new_tasks:
-                    out_buf.push(self._task(t.rid, t.state, i + 1))
+                    out_buf.push(self._task(t.rid, t.state, i + 1),
+                                 now=self.ticks)
         for b in self.buffers:
             b.sample_occupancy()
         self.concurrency.append(executed)
@@ -214,7 +259,13 @@ class CascadePipeline:
         return out
 
     def summary(self) -> dict:
+        """The ``engine.stats["cascade"]`` payload: per-stage execution,
+        queue, tail-latency (p50/p95 queue-wait ticks + service seconds)
+        and tier reports, plus pipeline-level concurrency, per-tier
+        attribution, and the modeled §V-A comparison.  Schema documented in
+        ``docs/serving.md``."""
         per_stage = {}
+        tiers: dict[str, dict] = {}
         for ex, buf in zip(self.executors, self.buffers):
             s = ex.summary()
             occ = buf.occupancy
@@ -223,10 +274,22 @@ class CascadePipeline:
                 "mean_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
                 "max_occupancy": max(occ) if occ else 0,
             }
+            s["queue_wait_ticks"] = percentiles(buf.waits)
             per_stage[ex.name] = s
+            t = tiers.setdefault(ex.effective_impl,
+                                 {"requested": set(), "stages": [],
+                                  "items": 0, "exec_s": 0.0})
+            t["requested"].add(ex.impl)
+            t["stages"].append(ex.name)
+            t["items"] += ex.items
+            t["exec_s"] += ex.exec_s
+        for t in tiers.values():
+            t["requested"] = sorted(t["requested"])
+            t["rps"] = (t["items"] / t["exec_s"]) if t["exec_s"] else 0.0
         conc = self.concurrency
         return {
             "stages": per_stage,
+            "tiers": tiers,
             "submitted": self.submitted,
             "completed": self.completed,
             "ticks": self.ticks,

@@ -51,13 +51,31 @@ def state_nbytes(state: Any) -> int:
                    for x in jax.tree.leaves(state)))
 
 
+def percentiles(xs: list) -> dict:
+    """p50/p95/mean/max summary of a latency sample (empty -> zeros)."""
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
+    arr = np.asarray(xs, np.float64)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p95": float(np.percentile(arr, 95)),
+        "mean": float(arr.mean()),
+        "max": float(arr.max()),
+    }
+
+
 @dataclasses.dataclass
 class StageTask:
-    """One request's state parked between stages."""
+    """One request's state parked between stages.
+
+    ``enqueued`` is the pipeline tick at which the task entered its current
+    stage buffer; the buffer turns it into the per-stage queue-wait sample
+    behind the p50/p95 tail-latency report."""
 
     rid: int
     state: dict
     group: tuple = ()  # (signature, workload group key) for batching
+    enqueued: int = 0  # pipeline tick when pushed into the current buffer
 
 
 # ---------------------------------------------------------------------------
@@ -70,31 +88,45 @@ class StageBuffer:
 
     ``capacity=None`` makes it unbounded (the admission queue; everywhere
     else the bound is what turns the executor chain into a backpressured
-    pipeline instead of an unbounded fan-in)."""
+    pipeline instead of an unbounded fan-in).
+
+    The buffer is also the tail-latency probe: ``push(task, now=tick)``
+    stamps the task, ``pop_group(..., now=tick)`` records how many ticks
+    each popped task queued, and ``waits`` accumulates the per-stage
+    queue-wait sample that :meth:`CascadePipeline.summary` reduces to
+    p50/p95.  Under continuous admission a request arriving mid-flight
+    simply lands in a partially-drained buffer via ``push`` — there is no
+    separate "late" path."""
 
     def __init__(self, name: str, capacity: int | None = None):
         self.name = name
         self.capacity = capacity
         self._q: deque[StageTask] = deque()
         self.occupancy: list[int] = []  # sampled once per pipeline tick
+        self.waits: list[int] = []  # queue-wait ticks of every popped task
 
     def __len__(self) -> int:
         return len(self._q)
 
     def room(self) -> int:
+        """Free slots (a large finite number when unbounded)."""
         if self.capacity is None:
             return 1 << 30
         return max(0, self.capacity - len(self._q))
 
-    def push(self, task: StageTask) -> bool:
+    def push(self, task: StageTask, now: int = 0) -> bool:
+        """Append ``task`` stamped with arrival tick ``now``; False when the
+        buffer is full (the producer must retry next tick — backpressure)."""
         if self.room() <= 0:
             return False
+        task.enqueued = now
         self._q.append(task)
         return True
 
-    def pop_group(self, max_n: int) -> list[StageTask]:
+    def pop_group(self, max_n: int, now: int = 0) -> list[StageTask]:
         """Pop up to ``max_n`` tasks sharing the head task's group key
-        (FIFO order preserved for the rest)."""
+        (FIFO order preserved for the rest); records each popped task's
+        queue wait (``now - enqueued`` ticks)."""
         if not self._q or max_n <= 0:
             return []
         head = self._q[0].group
@@ -107,6 +139,7 @@ class StageBuffer:
             else:
                 rest.append(t)
         self._q = rest
+        self.waits += [now - t.enqueued for t in taken]
         return taken
 
     def sample_occupancy(self) -> None:
@@ -130,20 +163,43 @@ def stage_unit_cost(stage) -> float:
     return stage.steps * mean_demand(stage)
 
 
+def effective_tier(impl: str) -> str:
+    """Degrade the ``pallas`` tier to ``interpret`` off-TPU.
+
+    A per-stage override like ``stage_impl={"sr": "pallas"}`` names the
+    deployment kernel; on a CPU/GPU host the same kernel body runs in
+    interpret mode (the CI tier) instead of failing to lower.  All other
+    tiers pass through — ``auto`` keeps its backend-aware resolution inside
+    each kernel package."""
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        return "interpret"
+    return impl
+
+
 class StageExecutor:
-    """Runs one workload stage over shape-homogeneous request batches."""
+    """Runs one workload stage over shape-homogeneous request batches.
+
+    Owns the stage's batch size (``max_batch``, derived from its mean HBM
+    demand under the shared budget) and its kernel tier: ``impl`` is the
+    tier requested for *this stage* (``ServeConfig.stage_impl`` override or
+    the engine-wide default), ``effective_impl`` what actually runs after
+    the off-TPU ``pallas -> interpret`` degrade.  Per-batch wall time and
+    batch-size samples feed the ``summary()`` tail-latency report."""
 
     def __init__(self, workload, stage, *, impl: str = "auto",
-                 max_batch: int = 4):
+                 max_batch: int = 4, temperature: float = 0.0):
         self.workload = workload
         self.stage = stage
-        self.impl = impl
+        self.impl = impl  # requested tier (stage override or engine default)
+        self.effective_impl = effective_tier(impl)
         self.max_batch = max_batch
+        self.temperature = temperature
         # -- stats ----------------------------------------------------------
         self.batches = 0
         self.items = 0
         self.exec_s = 0.0
         self.batch_sizes: list[int] = []
+        self.service_s: list[float] = []  # per-batch wall time sample
 
     @property
     def name(self) -> str:
@@ -155,9 +211,12 @@ class StageExecutor:
         batched = stack_states([t.state for t in tasks])
         t0 = time.perf_counter()
         new = self.workload.run_stage(params, self.stage, batched, key,
-                                      impl=self.impl)
+                                      impl=self.effective_impl,
+                                      temperature=self.temperature)
         new = jax.block_until_ready(new)
-        self.exec_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.exec_s += dt
+        self.service_s.append(dt)
         self.batches += 1
         self.items += len(tasks)
         self.batch_sizes.append(len(tasks))
@@ -166,6 +225,8 @@ class StageExecutor:
                 for t, s in zip(tasks, states)]
 
     def summary(self) -> dict:
+        """Per-stage serving report: batch counts, tiers, throughput, and
+        the p50/p95 per-batch service-time sample."""
         return {
             "batches": self.batches,
             "items": self.items,
@@ -173,5 +234,7 @@ class StageExecutor:
             "mean_batch": (self.items / self.batches) if self.batches else 0.0,
             "max_batch": self.max_batch,
             "impl": self.impl,
+            "effective_impl": self.effective_impl,
+            "service_s": percentiles(self.service_s),
             "throughput_rps": (self.items / self.exec_s) if self.exec_s else 0.0,
         }

@@ -1,3 +1,4 @@
+from repro.serving.arrivals import ON_COMPLETION, PATTERNS, ArrivalTrace
 from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
@@ -7,6 +8,9 @@ from repro.serving.scheduler import (
 from repro.serving.engine import LMServeEngine, ServeConfig, ServeEngine
 
 __all__ = [
+    "ON_COMPLETION",
+    "PATTERNS",
+    "ArrivalTrace",
     "BucketedScheduler",
     "DenoisePodScheduler",
     "Request",

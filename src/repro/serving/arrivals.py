@@ -1,0 +1,97 @@
+"""Request-arrival traces for online serving.
+
+Production serving never sees the whole batch up front: requests arrive
+*continuously*, and the follow-up characterization work to the source paper
+(Lee et al., arXiv:2410.00215) makes the resulting admission policy a
+first-class system knob for deployed multi-modal inference.  This module
+generates the arrival side of that experiment — per-request arrival ticks in
+the engine's scheduling-tick clock — so ``ServeEngine`` can be driven by an
+open-loop poisson process, a bursty front, or a closed loop, all seeded and
+reproducible.
+
+One tick is one ``ServeEngine.step()`` call (one pipeline scheduling round),
+so ``rate`` is "requests per scheduling round", not wall-clock seconds —
+the trace is hardware-independent and deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PATTERNS = ("poisson", "burst", "closed-loop")
+
+#: Sentinel arrival tick for closed-loop requests: the engine admits the
+#: request when an earlier one completes (fixed in-flight concurrency)
+#: instead of at a pre-computed tick.
+ON_COMPLETION = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """Seeded generator of per-request arrival ticks.
+
+    Patterns
+    --------
+    ``poisson``
+        Open-loop: exponential inter-arrival gaps with mean ``1 / rate``
+        ticks, cumulated and floored to integer ticks.  The classic
+        serving-benchmark arrival process.
+    ``burst``
+        Fronts of ``burst_size`` simultaneous requests every ``burst_gap``
+        ticks — the admission-pressure worst case (a full pod plus
+        stragglers landing mid-flight).
+    ``closed-loop``
+        The first ``concurrency`` requests arrive at tick 0; every later
+        request carries :data:`ON_COMPLETION` (``None``) and is released by
+        the engine when a previous request completes, holding in-flight
+        concurrency constant.
+
+    Examples
+    --------
+    >>> ArrivalTrace("poisson", rate=0.5, seed=0).ticks(4)   # doctest: +SKIP
+    [1, 3, 3, 8]
+    >>> ArrivalTrace("burst", burst_size=2, burst_gap=3).ticks(5)
+    [0, 0, 3, 3, 6]
+    >>> ArrivalTrace("closed-loop", concurrency=2).ticks(4)
+    [0, 0, None, None]
+    """
+
+    pattern: str = "poisson"
+    rate: float = 1.0  # poisson: mean arrivals per tick
+    burst_size: int = 4  # burst: requests per front
+    burst_gap: int = 4  # burst: ticks between fronts
+    concurrency: int = 2  # closed-loop: in-flight target
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.pattern not in PATTERNS:
+            raise ValueError(
+                f"unknown arrival pattern {self.pattern!r} "
+                f"(expected one of {PATTERNS})")
+        if self.pattern == "poisson" and self.rate <= 0:
+            raise ValueError(f"poisson rate must be > 0, got {self.rate}")
+        if self.pattern == "burst" and (self.burst_size < 1
+                                        or self.burst_gap < 0):
+            raise ValueError("burst_size must be >= 1 and burst_gap >= 0")
+        if self.pattern == "closed-loop" and self.concurrency < 1:
+            raise ValueError(
+                f"closed-loop concurrency must be >= 1, got {self.concurrency}")
+
+    def ticks(self, n: int) -> list:
+        """Arrival ticks for ``n`` requests, non-decreasing.
+
+        Entries are integer ticks, except for closed-loop tail requests
+        which carry :data:`ON_COMPLETION` (``None``) — admit on a
+        completion, not at a fixed tick."""
+        if n <= 0:
+            return []
+        if self.pattern == "poisson":
+            rng = np.random.default_rng(self.seed)
+            gaps = rng.exponential(1.0 / self.rate, size=n)
+            return [int(t) for t in np.floor(np.cumsum(gaps))]
+        if self.pattern == "burst":
+            return [(i // self.burst_size) * self.burst_gap for i in range(n)]
+        head = min(self.concurrency, n)
+        return [0] * head + [ON_COMPLETION] * (n - head)

@@ -3,10 +3,10 @@
 One ``submit/step/run`` surface for every suite model:
 
   * **LM route** (Table III Prefill/Decode): requests are admitted through
-    the bucketed scheduler, prefilled as a batch, then decoded step by step
-    with a shared jitted decode function (one compiled shape per bucket).
-    Per-batch ``padding_waste`` — the §V-B bucket-quantum trade — lands in
-    ``stats``.
+    the bucketed scheduler, then served by delegating to the workload's own
+    stage machinery (``LMWorkload.run_stage`` prefill + decode) — one greedy
+    /temperature decode loop shared with the cascade route.  Per-batch
+    ``padding_waste`` — the §V-B bucket-quantum trade — lands in ``stats``.
   * **Pod route** (diffusion / AR-image / TTV): requests accumulate into
     denoise pods; each pod runs the full generation pipeline as one batch
     while ``DenoisePodScheduler`` staggers the pod's step indices (paper
@@ -15,11 +15,23 @@ One ``submit/step/run`` surface for every suite model:
   * **Cascade route** (``ServeConfig(route="cascade")``, any workload): pods
     feed ``repro.pipeline.CascadePipeline``, which executes the workload's
     ``CostDescriptor.stages`` as a stage-level pipeline — cross-request
-    batching per stage, bounded latent-handoff queues, per-stage throughput
-    / queue occupancy / aligned-vs-pipelined HBM-demand profile in
-    ``stats["cascade"]``.
+    batching per stage, bounded latent-handoff queues, per-stage tail
+    latency (p50/p95 queue-wait ticks + service time) and kernel-tier
+    attribution in ``stats["cascade"]``.
+
+**Online serving.**  ``submit(..., arrival_tick=t)`` defers a request to
+scheduling tick ``t`` (one tick = one ``step()`` call); ``arrival_tick=None``
+is the closed-loop sentinel — the request is released when an earlier one
+completes.  ``repro.serving.ArrivalTrace`` generates these ticks
+(poisson / burst / closed-loop).  Under ``ServeConfig.admission =
+"continuous"`` a partial pod whose oldest request has waited
+``arrival_flush_wait`` ticks is flushed into the pipeline, where it joins
+the partially-drained stage queues mid-flight; ``admission="pod"`` holds
+partial pods for future arrivals (the lockstep baseline the ``bench_online``
+A/B measures against).  See ``docs/serving.md``.
 
 Every route threads ``ServeConfig.impl`` down to ``generate``/``run_stage``
+(cascade stages individually overridable via ``ServeConfig.stage_impl``)
 and reports per-tier served throughput in ``stats["tier_throughput"]``.
 
 Runs the reduced configs on CPU (tests/examples) and the full configs on the
@@ -29,14 +41,16 @@ production mesh via the same code path.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
+from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pipeline import CascadePipeline
+from repro.pipeline import CascadePipeline, percentiles, split_state, stack_states
 from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
@@ -48,6 +62,16 @@ from repro.workload import GenerativeWorkload, workload_for
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine-level serving knobs (workload-independent).
+
+    ``temperature`` is the LM sampling temperature (0 = greedy, bit-stable);
+    ``impl`` the engine-wide kernel tier, with ``stage_impl`` overriding it
+    per cascade stage by exact name or prefix (``{"sr": "pallas"}`` puts
+    every SR stage on the Pallas kernel while the rest keep ``impl``);
+    ``admission`` selects the online pod-admission policy — ``"continuous"``
+    flushes a partial pod after ``arrival_flush_wait`` ticks of arrival
+    pressure, ``"pod"`` holds partials until arrivals fill them."""
+
     max_batch: int = 4
     max_len: int = 256
     buckets: tuple = (32, 64, 128)
@@ -55,12 +79,21 @@ class ServeConfig:
     pod_size: int = 0  # 0 -> max_batch
     seed: int = 0
     impl: str = "auto"  # kernel tier threaded down to generate/run_stage
+    stage_impl: dict | None = None  # per-cascade-stage tier overrides
     route: str = "auto"  # "auto" (workload default) | "cascade"
     queue_capacity: int = 8  # cascade inter-stage handoff buffer depth
+    admission: str = "continuous"  # "continuous" | "pod" (online pod flush)
+    arrival_flush_wait: int = 2  # ticks a partial pod waits before flushing
 
     @property
     def resolved_pod_size(self) -> int:
         return self.pod_size or self.max_batch
+
+    def __post_init__(self):
+        if self.admission not in ("continuous", "pod"):
+            raise ValueError(
+                f"unknown admission policy {self.admission!r} "
+                f"(expected 'continuous' or 'pod')")
 
 
 class ServeEngine:
@@ -79,9 +112,22 @@ class ServeEngine:
                       else serve_cfg.route)
         if self.route not in ("lm", "pod", "cascade"):
             raise ValueError(f"unknown route {self.route!r}")
+        if serve_cfg.stage_impl and self.route != "cascade":
+            raise ValueError(
+                "stage_impl is a cascade-route knob; the lm/pod routes run "
+                "one tier end-to-end (ServeConfig.impl)")
         self.stats: dict = {"requests": 0, "impl": serve_cfg.impl,
                             "tier_throughput": {}}
         self.pipeline = None
+        # -- online-serving clock + arrival queues ---------------------------
+        self._tick = 0  # one tick == one step() call
+        self._future: list = []  # heap of (arrival_tick, seq, Request)
+        self._closed_loop: deque = deque()  # released on completions
+        self._ready_pods: deque = deque()  # pod route: admitted, unserved
+        self._seq = 0
+        self._arrival_tick: dict[int, int] = {}
+        self._admission_waits: list[int] = []  # arrival -> pipeline admission
+        self._e2e_ticks: list[int] = []  # arrival -> completion
 
         if self.route == "cascade":
             # DenoisePodScheduler-staggered pods feed the stage pipeline:
@@ -93,19 +139,20 @@ class ServeEngine:
             )
             self.pipeline = CascadePipeline(
                 workload, params, impl=serve_cfg.impl,
+                stage_impl=serve_cfg.stage_impl,
+                temperature=serve_cfg.temperature,
                 pod_size=serve_cfg.resolved_pod_size,
                 queue_capacity=serve_cfg.queue_capacity,
                 seed=serve_cfg.seed,
             )
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[],
+                              stage_impl=dict(serve_cfg.stage_impl or {}),
                               cascade={})
         elif self.route == "lm":
             self.scheduler = BucketedScheduler(serve_cfg.buckets,
                                                serve_cfg.max_batch)
-            self._decode_jit = jax.jit(
-                lambda p, tok, caches, cur: self.model.decode_step(
-                    p, tok, caches, cur, impl=serve_cfg.impl)
-            )
+            self._lm_stages = {s.name: s for s in self.cost.stages}
+            self._batch_index = 0
             self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
                               padding_waste=[])
         else:
@@ -117,7 +164,8 @@ class ServeEngine:
         self._pod_index = 0
 
     def _record_tier(self, n_done: int, wall_s: float) -> None:
-        """Per-``impl``-tier served-request throughput (ROADMAP open item)."""
+        """Per-``impl``-tier served-request throughput; stage-level tier
+        attribution lives in ``stats["cascade"]["tiers"]``."""
         t = self.stats["tier_throughput"].setdefault(
             self.serve_cfg.impl, {"requests": 0, "wall_s": 0.0, "rps": 0.0})
         t["requests"] += n_done
@@ -126,8 +174,17 @@ class ServeEngine:
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, rid: int, tokens, max_new_tokens: int = 0) -> None:
-        """Admit one request: ``tokens`` are the prompt/conditioning ids."""
+    def submit(self, rid: int, tokens, max_new_tokens: int = 0,
+               arrival_tick: int | None = 0) -> None:
+        """Admit one request; ``tokens`` are the prompt/conditioning ids.
+
+        ``arrival_tick`` places the request on the engine's scheduling clock
+        (one tick per :meth:`step`): 0 — or any tick already passed — admits
+        immediately (the offline/batch case), a future tick defers admission
+        until the clock reaches it, and ``None`` (closed loop,
+        :data:`repro.serving.ON_COMPLETION`) releases the request when an
+        earlier one completes.  ``ArrivalTrace.ticks`` generates these
+        values for poisson / burst / closed-loop experiments."""
         req = self.workload.prepare_request(rid, tokens,
                                             max_new_tokens=max_new_tokens)
         if self.workload.route == "lm":  # lm + cascaded-lm routes alike
@@ -137,13 +194,88 @@ class ServeEngine:
                     f"request {rid}: prompt length {req.prompt_len} exceeds "
                     f"the largest configured bucket ({limit}); raise "
                     f"ServeConfig.buckets or truncate the prompt")
-        self.scheduler.submit(
-            Request(rid=req.rid, prompt_len=req.prompt_len,
-                    max_new_tokens=req.max_new_tokens,
-                    denoise_steps=req.denoise_steps,
-                    state={"prompt": jnp.asarray(req.tokens, jnp.int32)})
-        )
+        sreq = Request(rid=req.rid, prompt_len=req.prompt_len,
+                       max_new_tokens=req.max_new_tokens,
+                       denoise_steps=req.denoise_steps,
+                       state={"prompt": jnp.asarray(req.tokens, jnp.int32)})
+        if arrival_tick is None:
+            # a closed-loop request only makes sense while something is in
+            # flight to complete and release it; into an idle engine it is
+            # admitted immediately (otherwise run() would spin forever
+            # waiting on a completion that can never happen)
+            if self.pending() == len(self._closed_loop):
+                self._enqueue(sreq, self._tick)
+            else:
+                self._closed_loop.append(sreq)
+        elif arrival_tick <= self._tick:
+            self._enqueue(sreq, self._tick)
+        else:
+            self._seq += 1
+            heapq.heappush(self._future, (int(arrival_tick), self._seq, sreq))
         self.stats["requests"] += 1
+
+    def _enqueue(self, sreq: Request, tick: int) -> None:
+        """Hand an arrived request to the route scheduler, stamped with its
+        arrival tick (what the admission-wait and e2e latencies key off)."""
+        sreq.arrived_at = float(tick)
+        self._arrival_tick[sreq.rid] = tick
+        self.scheduler.submit(sreq)
+
+    def _admit_arrivals(self) -> None:
+        """Release every deferred request whose arrival tick has come."""
+        while self._future and self._future[0][0] <= self._tick:
+            tick, _, sreq = heapq.heappop(self._future)
+            self._enqueue(sreq, tick)
+
+    def _arrivals_deferred(self) -> int:
+        return len(self._future) + len(self._closed_loop)
+
+    # -- online pod admission ------------------------------------------------
+
+    def _admit_pods_ready(self) -> list[list]:
+        """Pop every pod the admission policy allows this tick.
+
+        Full pods always go.  A partial (open) pod goes when (a) nothing
+        that could still fill it remains — no timed arrivals, and no
+        closed-loop waiters that in-flight work could release — or (b) the
+        policy is ``continuous`` and its oldest request has waited
+        ``arrival_flush_wait`` ticks (arrival-pressure flush; the §V-A
+        stagger profile of such a pod is computed from its *actual* size,
+        and its membership is frozen at flush time so no request's offset
+        is ever double-counted)."""
+        sched, cfg = self.scheduler, self.serve_cfg
+        pods = []
+        while True:
+            pod = sched.pop_pod()
+            if not pod and sched.open_size():
+                # work whose completions could still release closed-loop
+                # waiters: the stage pipeline, pods admitted but not yet
+                # served (pod route), and pods popped earlier in THIS call
+                in_flight = (
+                    (self.pipeline.pending() if self.pipeline is not None
+                     else 0)
+                    + sum(len(p) for p in self._ready_pods)
+                    + sum(len(p) for p in pods))
+                can_fill = bool(self._future) or bool(
+                    self._closed_loop and in_flight)
+                if not can_fill:
+                    sched.flush()  # nothing left that could fill the pod
+                elif cfg.admission == "continuous":
+                    sched.flush_stale(self._tick, cfg.arrival_flush_wait)
+                pod = sched.pop_pod()
+            if not pod:
+                return pods
+            pods.append(pod)
+
+    def _record_pod_profile(self, pod: list) -> None:
+        """Stagger schedule + §V-A bandwidth profile for one admitted pod."""
+        schedule = self.scheduler.schedule(pod)
+        self.stats["bandwidth_profile"].append(
+            DenoisePodScheduler.bandwidth_profile(
+                self.cost.step_demands(), schedule))
+        self.stats["pods"] += 1
+        for r in pod:
+            self._admission_waits.append(self._tick - int(r.arrived_at))
 
     # -- LM route ------------------------------------------------------------
 
@@ -154,6 +286,10 @@ class ServeEngine:
         return toks
 
     def _step_lm(self) -> list[tuple[int, Any]]:
+        """Serve one bucketed batch by delegating to the workload's own
+        prefill/decode stages (``LMWorkload.run_stage``) — the same decode
+        loop the cascade route runs, so greedy tokens are identical across
+        routes and ``ServeConfig.temperature`` sampling lives in one place."""
         t_step = time.perf_counter()
         bucket, batch = self.scheduler.next_batch()
         if not batch:
@@ -161,44 +297,45 @@ class ServeEngine:
         self.stats["padding_waste"].append(
             self.scheduler.padding_waste(batch, bucket))
         toks = self._pad_prompts(batch, bucket)
-        max_new = max(r.max_new_tokens for r in batch)
-        cap = bucket + max_new
+        state = stack_states([
+            self.workload.init_stage_state(toks[i],
+                                           max_new_tokens=r.max_new_tokens)
+            for i, r in enumerate(batch)
+        ])
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.serve_cfg.seed), self._batch_index)
+        self._batch_index += 1
 
         t0 = time.perf_counter()
-        logits, caches, ctx = self.model.prefill(
-            self.params, toks, max_len=cap, impl=self.serve_cfg.impl)
+        state = self.workload.run_stage(
+            self.params, self._lm_stages["prefill"], state, key,
+            impl=self.serve_cfg.impl, temperature=self.serve_cfg.temperature)
         self.stats["prefill_s"] += time.perf_counter() - t0
 
-        # NOTE: prompts are right-padded to the bucket; decode starts at the
-        # bucket boundary (padding tokens are part of the compiled shape —
-        # the §V-B trade the bucketed scheduler quantifies via padding_waste)
-        out = [[] for _ in batch]
-        cur = jnp.int32(bucket)
-        next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         t0 = time.perf_counter()
-        for _ in range(max_new):
-            for i in range(len(batch)):
-                out[i].append(int(next_tok[i, 0]))
-            logits, caches = self._decode_jit(self.params, next_tok, caches, cur)
-            next_tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
-            cur = cur + 1
+        state = self.workload.run_stage(
+            self.params, self._lm_stages["decode"], state, key,
+            impl=self.serve_cfg.impl, temperature=self.serve_cfg.temperature)
         self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["tokens"] += max_new * len(batch)
+        self.stats["tokens"] += (
+            max(r.max_new_tokens for r in batch) * len(batch))
         self._record_tier(len(batch), time.perf_counter() - t_step)
-        return [(r.rid, out[i][: r.max_new_tokens]) for i, r in enumerate(batch)]
+        outs = [self.workload.stage_output(s)
+                for s in split_state(state, len(batch))]
+        return [(r.rid, [int(t) for t in outs[i]])
+                for i, r in enumerate(batch)]
 
     # -- pod route -----------------------------------------------------------
 
     def _step_pod(self) -> list[tuple[int, Any]]:
-        pod = self.scheduler.next_pod()
+        if not self._ready_pods:
+            self._ready_pods.extend(self._admit_pods_ready())
+        pod = self._ready_pods.popleft() if self._ready_pods else []
         if not pod:
             return []
         # staggered step indices for the pod (paper §V-A) + the resulting
         # instantaneous-HBM-demand flattening vs the aligned baseline
-        schedule = self.scheduler.schedule(pod)
-        profile = DenoisePodScheduler.bandwidth_profile(
-            self.cost.step_demands(), schedule)
-        self.stats["bandwidth_profile"].append(profile)
+        self._record_pod_profile(pod)
 
         width = max(r.prompt_len for r in pod)
         toks = self._pad_prompts(pod, width)
@@ -211,25 +348,19 @@ class ServeEngine:
         out = jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.stats["generate_s"] += dt
-        self.stats["pods"] += 1
         self._record_tier(len(pod), dt)
         return [(r.rid, np.asarray(out[i])) for i, r in enumerate(pod)]
 
     # -- cascade route -------------------------------------------------------
 
     def _admit_cascade_pods(self) -> None:
-        """Drain the pod scheduler into the stage pipeline.  The stagger
-        schedule (§V-A) is recorded per pod; inside the pipeline requests
-        from all admitted pods batch together per stage."""
-        while self.scheduler.pending():
-            pod = self.scheduler.next_pod()
-            if not pod:
-                break
-            schedule = self.scheduler.schedule(pod)
-            self.stats["bandwidth_profile"].append(
-                DenoisePodScheduler.bandwidth_profile(
-                    self.cost.step_demands(), schedule))
-            self.stats["pods"] += 1
+        """Feed every admission-ready pod into the stage pipeline.  The
+        stagger schedule (§V-A) is recorded per pod; inside the pipeline
+        requests from all admitted pods batch together per stage, and a
+        pod admitted mid-flight joins the partially-drained first-stage
+        queue (continuous admission)."""
+        for pod in self._admit_pods_ready():
+            self._record_pod_profile(pod)
             for r in pod:
                 width = min(bucket_of(r.prompt_len, self.serve_cfg.buckets),
                             self.workload.max_prompt_len)
@@ -245,28 +376,58 @@ class ServeEngine:
         done = self.pipeline.tick()
         dt = time.perf_counter() - t0
         self.stats["generate_s"] += dt
-        if not self.pending():
-            # summary walks the full dispatch/occupancy logs — refresh it
-            # once the pipeline drains, not every tick (O(ticks^2) otherwise)
-            self.stats["cascade"] = self.pipeline.summary()
         self._record_tier(len(done), dt)
         return [(rid, np.asarray(out)) for rid, out in done]
+
+    def _finalize_cascade_stats(self) -> None:
+        """Refresh ``stats["cascade"]`` once the pipeline drains (summary
+        walks the full dispatch/occupancy logs — O(ticks^2) if per-tick),
+        folding in the engine-level admission/latency report."""
+        self.stats["cascade"] = self.pipeline.summary()
+        self.stats["cascade"]["admission"] = {
+            "policy": self.serve_cfg.admission,
+            "flush_wait_ticks": self.serve_cfg.arrival_flush_wait,
+            "wait_ticks": percentiles(self._admission_waits),
+        }
+        self.stats["cascade"]["request_latency_ticks"] = percentiles(
+            self._e2e_ticks)
 
     # -- unified loop --------------------------------------------------------
 
     def step(self) -> list[tuple[int, Any]]:
-        """Serve one scheduled batch/pod/pipeline tick; returns (rid, out)."""
+        """Advance the serving clock one tick: admit due arrivals, serve one
+        scheduled batch / pod / pipeline round, release closed-loop
+        requests for completions.  Returns completed ``(rid, out)`` pairs
+        (often empty mid-pipeline)."""
+        self._admit_arrivals()
         if self.route == "cascade":
-            return self._step_cascade()
-        if self.route == "lm":
-            return self._step_lm()
-        return self._step_pod()
+            done = self._step_cascade()
+        elif self.route == "lm":
+            done = self._step_lm()
+        else:
+            done = self._step_pod()
+        for rid, _ in done:
+            if rid in self._arrival_tick:
+                self._e2e_ticks.append(self._tick - self._arrival_tick[rid])
+            if self._closed_loop:  # one completion releases one waiter
+                self._enqueue(self._closed_loop.popleft(), self._tick)
+        self._tick += 1
+        if self.route == "cascade" and not self.pending():
+            self._finalize_cascade_stats()
+        return done
 
     def pending(self) -> int:
-        return self.scheduler.pending() + (
-            self.pipeline.pending() if self.pipeline is not None else 0)
+        """Requests anywhere in the system: deferred arrivals, scheduler
+        queues, admitted-but-unserved pods, and the stage pipeline."""
+        return (self.scheduler.pending()
+                + self._arrivals_deferred()
+                + sum(len(p) for p in self._ready_pods)
+                + (self.pipeline.pending() if self.pipeline is not None else 0))
 
     def run(self) -> dict:
+        """Step until drained; returns ``{rid: output}``.  With deferred
+        arrivals the loop idles through empty ticks until the clock reaches
+        them — the tick clock, not wall time, is the simulation axis."""
         results = {}
         while self.pending():
             for rid, out in self.step():

@@ -84,6 +84,17 @@ class DenoisePodScheduler:
     (t + i*k) mod total_steps at tick t, so the pod's instantaneous mix of
     UNet phases is uniform.  ``bandwidth_profile`` lets the benchmark show
     peak-vs-mean HBM-demand flattening against the naive aligned schedule.
+
+    Online serving adds an arrival-time-aware flush: a partial pod whose
+    oldest request has waited ``max_wait`` scheduling ticks is flushed by
+    :meth:`flush_stale` instead of blocking on arrivals that may be ticks
+    away (the continuous-admission policy, ``docs/serving.md``).  Flushing
+    *moves* the open requests into the pod queue exactly once — an
+    early-flushed pod's membership is frozen at flush time, so later
+    arrivals open a fresh pod and ``schedule``/``bandwidth_profile`` count
+    each request's stagger offset exactly once (regression-tested; a
+    flush that aliased the open list would double-count the flushed pod's
+    offsets in the §V-A profile once the list refilled).
     """
 
     def __init__(self, pod_size: int = 4, total_steps: int = 50):
@@ -105,14 +116,36 @@ class DenoisePodScheduler:
             self.pods.append(self._open)
             self._open = []
 
+    def flush_stale(self, now: float, max_wait: float) -> bool:
+        """Arrival-pressure flush: close the open partial pod when its
+        oldest request has waited ``max_wait`` ticks.  Returns True when a
+        pod was flushed; idempotent (a second call in the same tick finds
+        the open list empty and is a no-op)."""
+        if not self._open:
+            return False
+        if now - min(r.arrived_at for r in self._open) < max_wait:
+            return False
+        self.flush()
+        return True
+
+    def open_size(self) -> int:
+        """Requests waiting in the open (not yet flushed) partial pod."""
+        return len(self._open)
+
     def pending(self) -> int:
         return sum(len(p) for p in self.pods) + len(self._open)
 
     def next_pod(self) -> list:
         """Pop the next pod to serve (flushing a partial pod if that is all
-        that remains)."""
+        that remains) — drain semantics.  Online admission uses
+        :meth:`pop_pod` + :meth:`flush_stale` so a partial pod can keep
+        waiting for imminent arrivals instead."""
         if not self.pods:
             self.flush()
+        return self.pods.popleft() if self.pods else []
+
+    def pop_pod(self) -> list:
+        """Pop a closed pod without flushing the open partial one."""
         return self.pods.popleft() if self.pods else []
 
     def schedule(self, pod: list) -> list[list[int]]:

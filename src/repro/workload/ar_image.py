@@ -66,7 +66,9 @@ class ARImageWorkload(GenerativeWorkload):
             ),
         )
 
-    def run_stage(self, params, stage, state, key, *, impl="auto"):
+    def run_stage(self, params, stage, state, key, *, impl="auto",
+                  temperature: float = 0.0):
+        del temperature  # AR/parallel image samplers own their sampling rules
         model = self.model
         if stage.name == "text_encoder":
             with tracer.scope("text_encoder"):

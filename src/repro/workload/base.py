@@ -176,10 +176,15 @@ class GenerativeWorkload:
         return {"tokens": jnp.asarray(tokens, jnp.int32)}
 
     def run_stage(self, params, stage: Stage, state: dict, key, *,
-                  impl="auto") -> dict:
+                  impl="auto", temperature: float = 0.0) -> dict:
         """Execute one descriptor ``stage`` over batched ``state`` -> new
         batched state.  The final stage must store the result under
-        ``"out"`` (or override ``stage_output``)."""
+        ``"out"`` (or override ``stage_output``).
+
+        ``impl`` selects the kernel tier *for this stage* (the cascade
+        pipeline resolves per-stage overrides before calling); ``temperature``
+        is the sampling temperature for token-sampling stages (0 = greedy) —
+        workloads whose samplers don't take a temperature ignore it."""
         raise NotImplementedError(
             f"{type(self).__name__} does not implement run_stage for "
             f"cascade serving (stage {stage.name!r})")

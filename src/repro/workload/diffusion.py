@@ -96,10 +96,12 @@ class DiffusionWorkload(GenerativeWorkload):
         return CostDescriptor(arch=cfg.name, route=self.route,
                               stages=tuple(stages))
 
-    def run_stage(self, params, stage, state, key, *, impl="auto"):
+    def run_stage(self, params, stage, state, key, *, impl="auto",
+                  temperature: float = 0.0):
         import jax
         import jax.numpy as jnp
 
+        del temperature  # DDIM sampling has no temperature knob
         model, cfg = self.model, self.cfg
         if stage.name == "text_encoder":
             ctx = model.encode_text(params, state["tokens"], impl=impl)

@@ -69,8 +69,22 @@ class LMWorkload(GenerativeWorkload):
         return {"tokens": jnp.asarray(tokens, jnp.int32),
                 "max_new": jnp.int32(max_new_tokens)}
 
-    def run_stage(self, params, stage, state, key, *, impl="auto"):
-        del key  # greedy decode is deterministic
+    @staticmethod
+    def _next_token(logits, temperature: float, key):
+        """Next-token rule shared by the lm route and the cascade decode
+        stage: greedy argmax at temperature 0 (bit-identical to the
+        pre-consolidation decode loop), seeded categorical sampling above.
+        ``logits`` is (B, V) — the last-position slice."""
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature).astype(jnp.int32)[:, None]
+
+    def run_stage(self, params, stage, state, key, *, impl="auto",
+                  temperature: float = 0.0):
+        """Prefill/decode as cascade stages — the single decode loop both
+        serving routes share (``ServeEngine._step_lm`` delegates here), so
+        ``ServeConfig.temperature`` sampling lives in exactly one place."""
         model = self.model
         if stage.name == "prefill":
             toks = state["tokens"]  # (B, S) bucket-padded
@@ -78,7 +92,8 @@ class LMWorkload(GenerativeWorkload):
             cap = S + int(jnp.max(state["max_new"]))
             logits, caches, _ = model.prefill(params, toks, impl=impl,
                                               max_len=cap)
-            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            nxt = self._next_token(logits[:, -1], temperature,
+                                   jax.random.fold_in(key, 0))
             return {
                 "max_new": state["max_new"],
                 "next_tok": nxt,
@@ -98,10 +113,11 @@ class LMWorkload(GenerativeWorkload):
             steps = int(jnp.max(state["max_new"]))
             decode = self._decode_jit()
             out = []
-            for _ in range(steps):
+            for step in range(steps):
                 out.append(nxt)
                 logits, caches = decode(params, nxt, caches, cur, impl=impl)
-                nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+                nxt = self._next_token(logits[:, 0], temperature,
+                                       jax.random.fold_in(key, 1 + step))
                 cur = cur + 1
             tokens = (jnp.concatenate(out, axis=1) if out
                       else jnp.zeros((B, 0), jnp.int32))

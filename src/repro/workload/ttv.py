@@ -81,11 +81,14 @@ class MakeAVideoWorkload(GenerativeWorkload):
         return CostDescriptor(arch=cfg.name, route=self.route,
                               stages=tuple(stages))
 
-    def run_stage(self, params, stage, state, key, *, impl="auto"):
+    def run_stage(self, params, stage, state, key, *, impl="auto",
+                  temperature: float = 0.0):
         import jax
         import jax.numpy as jnp
 
         from repro.models.diffusion import ddim_range
+
+        del temperature  # DDIM sampling has no temperature knob
 
         model, cfg = self.model, self.cfg
         if stage.name == "text_encoder":
@@ -161,7 +164,9 @@ class PhenakiWorkload(GenerativeWorkload):
             ),
         )
 
-    def run_stage(self, params, stage, state, key, *, impl="auto"):
+    def run_stage(self, params, stage, state, key, *, impl="auto",
+                  temperature: float = 0.0):
+        del temperature  # Phenaki's masked parallel decode is confidence-based
         model = self.model
         if stage.name == "text_encoder":
             with tracer.scope("text_encoder"):

@@ -126,7 +126,10 @@ def test_stage_batched_beats_lockstep_on_modeled_throughput_and_flatness():
 
 def test_lm_cascade_prefill_decode_matches_lm_route(rng_key):
     """The LM path degenerates to a 2-stage cascade of the same machinery:
-    greedy tokens must match the bucketed lm route exactly."""
+    greedy tokens must match the bucketed lm route exactly — and both must
+    match the tokens pinned from the pre-consolidation ``_step_lm`` decode
+    loop (the lm route now *delegates* to ``run_stage("decode")``; the
+    delegation must be bit-transparent)."""
     wl = reduced_workload(get_config("olmo-1b"))
     params = wl.init(rng_key)
     prompt = np.arange(5) % wl.prompt_vocab
@@ -136,12 +139,15 @@ def test_lm_cascade_prefill_decode_matches_lm_route(rng_key):
                           ServeConfig(max_batch=2, buckets=(8, 16),
                                       route=route))
         eng.submit(0, prompt, max_new_tokens=4)
-        out[route] = list(np.asarray(eng.run()[0]))
+        out[route] = [int(t) for t in eng.run()[0]]
         # over-long prompts are rejected on both lm-shaped routes, not
         # silently given a never-batchable compiled shape
         with pytest.raises(ValueError, match="exceeds"):
             eng.submit(9, np.arange(40) % wl.prompt_vocab, max_new_tokens=2)
     assert out["auto"] == out["cascade"]
+    # recorded from ServeEngine._step_lm's inline greedy loop at the commit
+    # before the consolidation (params from the shared rng_key fixture)
+    assert out["auto"] == [245, 53, 245, 245]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,386 @@
+"""Online cascade serving (ISSUE 4): continuous admission, arrival traces,
+per-stage kernel-tier overrides, tail-latency reporting, the lm-route decode
+consolidation, and the early-flush stagger-profile regression."""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs.suite  # noqa: F401 — registers the paper suite
+from repro.configs import get_config
+from repro.configs.tiny import TINY_TTI_CASCADE
+from repro.pipeline import effective_tier, percentiles, resolve_stage_impls
+from repro.serving import (
+    ON_COMPLETION,
+    ArrivalTrace,
+    DenoisePodScheduler,
+    Request,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.workload import Stage, reduced_workload, workload_for
+
+# Greedy lm-route tokens recorded from the pre-consolidation decode loop
+# (ServeEngine._step_lm's inline argmax): reduced olmo-1b, PRNGKey(0) params,
+# buckets (8, 16), max_batch 2.  The _step_lm -> run_stage("decode")
+# delegation must keep these bit-identical.
+PINNED_PROMPTS = {0: np.arange(5), 1: np.arange(7) * 3}
+PINNED_TOKENS = {0: [245, 53, 245, 245, 53, 245],
+                 1: [191, 37, 98, 191, 174, 253]}
+
+
+# ---------------------------------------------------------------------------
+# ArrivalTrace
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_trace_poisson_is_seeded_and_monotonic():
+    a = ArrivalTrace("poisson", rate=0.5, seed=3).ticks(16)
+    b = ArrivalTrace("poisson", rate=0.5, seed=3).ticks(16)
+    c = ArrivalTrace("poisson", rate=0.5, seed=4).ticks(16)
+    assert a == b and a != c
+    assert all(isinstance(t, int) and t >= 0 for t in a)
+    assert a == sorted(a)
+    # higher rate -> arrivals pack into earlier ticks
+    fast = ArrivalTrace("poisson", rate=5.0, seed=3).ticks(16)
+    assert max(fast) < max(a)
+
+
+def test_arrival_trace_burst_and_closed_loop_shapes():
+    assert ArrivalTrace("burst", burst_size=2, burst_gap=3).ticks(5) == \
+        [0, 0, 3, 3, 6]
+    cl = ArrivalTrace("closed-loop", concurrency=2).ticks(4)
+    assert cl == [0, 0, ON_COMPLETION, ON_COMPLETION]
+    assert ArrivalTrace("poisson").ticks(0) == []
+
+
+def test_arrival_trace_rejects_bad_configs():
+    with pytest.raises(ValueError, match="pattern"):
+        ArrivalTrace("uniform")
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalTrace("poisson", rate=0.0)
+    with pytest.raises(ValueError, match="concurrency"):
+        ArrivalTrace("closed-loop", concurrency=0)
+
+
+# ---------------------------------------------------------------------------
+# Continuous admission (tick-level)
+# ---------------------------------------------------------------------------
+
+
+def _cascade_engine(wl, params, **cfg_kw):
+    return ServeEngine(wl, params,
+                       ServeConfig(max_batch=2, buckets=(8,), route="cascade",
+                                   **cfg_kw))
+
+
+def test_continuous_admission_joins_partially_drained_stage_queue():
+    """A request arriving mid-flight must enter the first stage's queue
+    after earlier work has already drained past it — i.e. the first stage
+    dispatches again on a later tick — rather than waiting for a full
+    pipeline drain (tick-level acceptance for the tentpole)."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = _cascade_engine(wl, params, arrival_flush_wait=1)
+    rng = np.random.default_rng(0)
+
+    def prompt():
+        return rng.integers(0, wl.prompt_vocab, size=6)
+
+    # a full pod at tick 0, one straggler mid-flight
+    eng.submit(0, prompt(), arrival_tick=0)
+    eng.submit(1, prompt(), arrival_tick=0)
+    eng.submit(2, prompt(), arrival_tick=2)
+
+    first_stage_ticks = []
+    results = {}
+    while eng.pending():
+        tick = eng._tick
+        before = eng.pipeline.executors[0].batches
+        for rid, out in eng.step():
+            results[rid] = out
+        if eng.pipeline.executors[0].batches > before:
+            first_stage_ticks.append(tick)
+    assert set(results) == {0, 1, 2}
+    # the straggler re-opened the (drained) first-stage queue on a later
+    # tick: text_encoder dispatched at least twice, at distinct ticks, and
+    # the second dispatch happened at/after the straggler's arrival tick
+    assert len(first_stage_ticks) >= 2
+    assert first_stage_ticks[1] >= 2
+    # deeper stages were already occupied when the straggler entered
+    assert eng.stats["cascade"]["concurrency"]["max"] >= 2
+    # admission report present with the continuous policy
+    adm = eng.stats["cascade"]["admission"]
+    assert adm["policy"] == "continuous"
+    assert adm["wait_ticks"]["max"] >= 0.0
+
+
+def test_pod_admission_holds_partial_pods_continuous_flushes_them():
+    """admission="pod" waits for arrivals to fill a pod; "continuous"
+    flushes after arrival_flush_wait ticks — the straggler completes in
+    strictly fewer ticks under continuous admission."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    e2e = {}
+    for admission in ("pod", "continuous"):
+        eng = _cascade_engine(wl, params, admission=admission,
+                              arrival_flush_wait=1)
+        rng = np.random.default_rng(0)
+        # pod_size=2 but arrivals 4 ticks apart: each request is a partial
+        # pod under arrival pressure
+        eng.submit(0, rng.integers(0, wl.prompt_vocab, size=6),
+                   arrival_tick=0)
+        eng.submit(1, rng.integers(0, wl.prompt_vocab, size=6),
+                   arrival_tick=4)
+        assert set(eng.run()) == {0, 1}
+        e2e[admission] = eng.stats["cascade"]["request_latency_ticks"]["p95"]
+    assert e2e["continuous"] < e2e["pod"]
+
+
+def test_pod_admission_holds_partial_for_closed_loop_releases():
+    """Regression (review finding): under admission="pod" a partial pod
+    must be HELD when closed-loop waiters exist that completions of
+    already-popped (but not yet finished) pods will release — in_flight
+    must count pods popped in the same admission call, not just the
+    pipeline.  The buggy version flushed rid 2 as a singleton pod."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = _cascade_engine(wl, params, admission="pod")
+    rng = np.random.default_rng(0)
+    for rid in range(3):  # one full pod + a partial at tick 0
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6),
+                   arrival_tick=0)
+    for rid in (3, 4):  # released by completions, fill/extend the partial
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6),
+                   arrival_tick=None)
+    results = eng.run()
+    assert set(results) == set(range(5))
+    # pod sizes recoverable from each §V-A profile's aligned baseline
+    # (aligned_peak = per-request peak over the stagger window x pod size):
+    # [2, 2, 1], NOT the eager-flush [2, 1, 1, 1]
+    cd = wl.cost_descriptor()
+    demands, total = cd.step_demands(), cd.iterative_steps()
+    unit = max(demands[t % len(demands)] for t in range(total))
+    sizes = [round(p["aligned_peak"] / unit)
+             for p in eng.stats["bandwidth_profile"]]
+    assert sizes == [2, 2, 1]
+
+
+def test_closed_loop_only_submission_admits_immediately_instead_of_hanging():
+    """Regression (review finding): arrival_tick=None into an idle engine
+    must admit immediately — nothing is in flight to ever release it, so
+    queueing it would make run() spin forever."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(wl, params, ServeConfig(max_batch=2, buckets=(8, 16)))
+    eng.submit(0, np.arange(5) % wl.prompt_vocab, 4, arrival_tick=None)
+    eng.submit(1, np.arange(5) % wl.prompt_vocab, 4, arrival_tick=None)
+    results = eng.run()  # must terminate: 0 admitted now, 1 on completion
+    assert set(results) == {0, 1}
+    assert all(len(v) == 4 for v in results.values())
+
+
+def test_closed_loop_arrivals_release_on_completion():
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = _cascade_engine(wl, params, arrival_flush_wait=1)
+    rng = np.random.default_rng(0)
+    ticks = ArrivalTrace("closed-loop", concurrency=2).ticks(4)
+    for rid, t in enumerate(ticks):
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6),
+                   arrival_tick=t)
+    results = eng.run()
+    assert set(results) == {0, 1, 2, 3}
+    # the closed-loop tail was released strictly after tick 0
+    assert all(eng._arrival_tick[r] > 0 for r in (2, 3))
+
+
+def test_cascade_tail_latency_and_tier_schema():
+    """stats["cascade"] carries the documented per-stage p50/p95 queue-wait
+    + service-time fields and the per-tier attribution (docs/serving.md)."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = _cascade_engine(wl, params)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6))
+    eng.run()
+    c = eng.stats["cascade"]
+    for st in c["stages"].values():
+        for field in ("queue_wait_ticks", "service_s"):
+            assert set(st[field]) == {"p50", "p95", "mean", "max"}
+            assert st[field]["p95"] >= st[field]["p50"] >= 0.0
+        assert st["effective_impl"] == effective_tier(st["impl"])
+    assert c["request_latency_ticks"]["p95"] >= c["request_latency_ticks"]["p50"]
+    tiers = c["tiers"]
+    assert sum(len(t["stages"]) for t in tiers.values()) == len(c["stages"])
+    assert all(t["items"] > 0 for t in tiers.values())
+
+
+# ---------------------------------------------------------------------------
+# Per-stage kernel-tier overrides
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_stage_impls_exact_prefix_and_typo():
+    stages = [Stage("text_encoder", 1, 8), Stage("denoise", 2, 64),
+              Stage("sr0", 2, 256), Stage("sr1", 2, 1024)]
+    impls = resolve_stage_impls(stages, "auto",
+                                {"sr": "pallas", "sr1": "naive",
+                                 "denoise": "blocked_jax"})
+    # default for unmatched, exact beats prefix, prefix covers the rest
+    assert impls == ["auto", "blocked_jax", "pallas", "naive"]
+    with pytest.raises(ValueError, match="match no stage"):
+        resolve_stage_impls(stages, "auto", {"sr9x": "pallas"})
+
+
+def test_stage_impl_override_reaches_run_stage_on_every_stage():
+    """Acceptance: ServeConfig.stage_impl threads into run_stage per stage
+    — every stage sees exactly its configured tier (after the off-TPU
+    pallas->interpret degrade)."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    seen = {}
+    orig = wl.run_stage
+
+    def spy(params, stage, state, key, *, impl="auto", temperature=0.0):
+        seen.setdefault(stage.name, set()).add(impl)
+        return orig(params, stage, state, key, impl=impl,
+                    temperature=temperature)
+
+    wl.run_stage = spy
+    stage_impl = {"text_encoder": "naive", "denoise": "blocked_jax",
+                  "sr": "pallas"}
+    eng = _cascade_engine(wl, params, stage_impl=stage_impl)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6))
+    results = eng.run()
+    assert set(results) == {0, 1, 2}
+    assert seen == {"text_encoder": {"naive"}, "denoise": {"blocked_jax"},
+                    "sr0": {effective_tier("pallas")}}
+    # attribution: the override tiers land in stats (requested + effective)
+    st = eng.stats["cascade"]["stages"]
+    assert st["sr0"]["impl"] == "pallas"
+    assert st["sr0"]["effective_impl"] == effective_tier("pallas")
+    assert eng.stats["stage_impl"] == stage_impl
+
+
+def test_stage_impl_rejected_off_cascade_route():
+    wl = reduced_workload(get_config("olmo-1b"))
+    with pytest.raises(ValueError, match="cascade-route"):
+        ServeEngine(wl, {}, ServeConfig(stage_impl={"decode": "naive"}))
+
+
+# ---------------------------------------------------------------------------
+# LM decode consolidation + temperature sampling
+# ---------------------------------------------------------------------------
+
+
+def _lm_engine(wl, params, **kw):
+    return ServeEngine(wl, params,
+                       ServeConfig(max_batch=2, buckets=(8, 16), **kw))
+
+
+def test_lm_route_greedy_tokens_pinned_across_decode_consolidation(rng_key):
+    """Acceptance: _step_lm now delegates to LMWorkload.run_stage("decode");
+    greedy tokens must stay bit-identical to the pre-consolidation loop
+    (PINNED_TOKENS recorded at the commit before the delegation)."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(jax.random.PRNGKey(0))
+    eng = _lm_engine(wl, params)
+    for rid, p in PINNED_PROMPTS.items():
+        eng.submit(rid, p % wl.prompt_vocab, 6)
+    out = eng.run()
+    assert {r: [int(t) for t in v] for r, v in out.items()} == PINNED_TOKENS
+
+
+def test_lm_temperature_sampling_is_seed_deterministic_on_both_routes():
+    """temperature>0 must sample identically across reruns with the same
+    seed on the lm route AND the cascade route, and differ across seeds."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(jax.random.PRNGKey(0))
+    prompt = np.arange(6) % wl.prompt_vocab
+
+    def serve(route, seed):
+        eng = ServeEngine(wl, params,
+                          ServeConfig(max_batch=2, buckets=(8, 16),
+                                      route=route, temperature=0.8,
+                                      seed=seed))
+        eng.submit(0, prompt, max_new_tokens=8)
+        return [int(t) for t in eng.run()[0]]
+
+    for route in ("auto", "cascade"):
+        assert serve(route, 0) == serve(route, 0)
+        assert len(serve(route, 0)) == 8
+    # different seeds explore: at least one route/seed pair diverges
+    assert (serve("auto", 0) != serve("auto", 123)
+            or serve("cascade", 0) != serve("cascade", 123))
+
+
+def test_lm_online_arrivals_serve_in_multiple_batches():
+    """Deferred arrivals on the lm route: the engine idles until the
+    arrival tick, then serves — two batches, identical outputs to
+    submitting everything upfront (greedy is arrival-invariant)."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(jax.random.PRNGKey(0))
+
+    def serve(ticks):
+        eng = _lm_engine(wl, params)
+        for rid, t in enumerate(ticks):
+            eng.submit(rid, PINNED_PROMPTS[rid % 2] % wl.prompt_vocab, 6,
+                       arrival_tick=t)
+        return {r: [int(x) for x in v] for r, v in eng.run().items()}
+
+    upfront = serve([0, 0])
+    deferred = serve([0, 3])
+    assert upfront == deferred == {r: PINNED_TOKENS[r] for r in (0, 1)}
+
+
+# ---------------------------------------------------------------------------
+# DenoisePodScheduler early-flush regression (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_early_flushed_pod_keeps_membership_and_profile_size():
+    """Regression: a pod flushed early by arrival pressure freezes its
+    membership — later submissions open a NEW pod instead of mutating the
+    flushed one, so no request's stagger offset is counted twice — and its
+    §V-A bandwidth profile is computed from the actual (partial) size."""
+    demands = [1.0, 2.0, 3.0, 2.0, 1.0, 1.0]
+    sched = DenoisePodScheduler(pod_size=4, total_steps=len(demands))
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt_len=8, denoise_steps=6,
+                             arrived_at=0.0))
+    assert not sched.flush_stale(now=1, max_wait=2)  # not stale yet
+    assert sched.flush_stale(now=2, max_wait=2)
+    assert not sched.flush_stale(now=2, max_wait=2)  # idempotent
+    # later arrivals must not join (or duplicate into) the flushed pod
+    for i in range(2, 6):
+        sched.submit(Request(rid=i, prompt_len=8, denoise_steps=6,
+                             arrived_at=3.0))
+    pods = []
+    while True:
+        pod = sched.pop_pod()
+        if not pod:
+            break
+        pods.append([r.rid for r in pod])
+    assert pods == [[0, 1], [2, 3, 4, 5]]  # conservation: each rid once
+
+    flushed = [Request(rid=i, prompt_len=8, denoise_steps=6) for i in range(2)]
+    ticks = sched.schedule(flushed)
+    # stagger offsets derive from the flushed size (2), not pod_size (4):
+    # one offset per actual member, all distinct
+    assert all(len(t) == 2 for t in ticks)
+    assert len(set(ticks[0])) == 2
+    prof = DenoisePodScheduler.bandwidth_profile(demands, ticks)
+    # aligned baseline counts each flushed request exactly once per tick
+    assert prof["aligned_peak"] == max(demands) * 2
+    assert prof["peak_reduction"] >= 1.0
+
+
+def test_percentiles_helper_empty_and_basic():
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "mean": 0.0,
+                               "max": 0.0}
+    p = percentiles([1, 2, 3, 4])
+    assert p["p50"] == 2.5 and p["max"] == 4.0 and p["mean"] == 2.5

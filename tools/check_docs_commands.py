@@ -1,0 +1,112 @@
+"""Docs-consistency check: smoke-execute every documented CLI command.
+
+Walks the fenced code blocks of ``README.md`` and ``docs/*.md``, extracts
+every command line that invokes ``python -m repro...`` or
+``benchmarks/run.py``, and executes it so the docs cannot drift from the
+CLI:
+
+* ``python -m repro.launch...`` commands run **verbatim** — and must carry
+  ``--reduced`` (a documented launcher command that needs the full config
+  is a docs bug; CI boxes are CPU-only).
+* ``benchmarks/run.py`` commands run with ``--help`` appended instead of
+  their real arguments (the benchmark A/Bs already run as their own CI
+  step; here we only verify the documented invocation still parses).
+
+Duplicate commands across files run once.  Any non-zero exit fails the
+check and prints the captured output.
+
+    PYTHONPATH=src python tools/check_docs_commands.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+TIMEOUT_S = 600
+
+FENCE_RE = re.compile(r"^```")
+CMD_RE = re.compile(r"python\s+(-m\s+repro[.\w]*|benchmarks/run\.py)")
+
+
+def doc_files() -> list[pathlib.Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def fenced_lines(path: pathlib.Path):
+    """Yield (lineno, line) for every line inside a fenced code block."""
+    in_fence = False
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            yield i, line
+
+
+def extract_commands() -> list[tuple[str, str]]:
+    """(source, command) pairs; commands de-duplicated in discovery order.
+    Continuation lines (trailing backslash) are joined first."""
+    seen, out = set(), []
+    for path in doc_files():
+        pending = ""
+        for lineno, raw in fenced_lines(path):
+            line = pending + raw.strip()
+            if line.endswith("\\"):
+                pending = line[:-1] + " "
+                continue
+            pending = ""
+            if not CMD_RE.search(line):
+                continue
+            line = line.lstrip("$ ").strip()
+            if line.startswith("#"):
+                continue
+            if line not in seen:
+                seen.add(line)
+                out.append((f"{path.relative_to(ROOT)}:{lineno}", line))
+    return out
+
+
+def smoke_command(cmd: str) -> str:
+    """Apply the smoke policy: bench commands parse-check via --help."""
+    if "benchmarks/run.py" in cmd:
+        prog = cmd.split("benchmarks/run.py")[0] + "benchmarks/run.py"
+        return prog + " --help"
+    return cmd
+
+
+def main() -> int:
+    commands = extract_commands()
+    if not commands:
+        print("ERROR: no documented repro/benchmark commands found — the "
+              "extraction regex or the docs are broken")
+        return 1
+    failures = 0
+    for source, cmd in commands:
+        if "repro.launch" in cmd and "--reduced" not in cmd:
+            print(f"FAIL {source}: launcher command lacks --reduced: {cmd}")
+            failures += 1
+            continue
+        run = smoke_command(cmd)
+        print(f"RUN  {source}: {run}", flush=True)
+        try:
+            proc = subprocess.run(
+                run, shell=True, cwd=ROOT, timeout=TIMEOUT_S,
+                capture_output=True, text=True)
+        except subprocess.TimeoutExpired:
+            print(f"FAIL {source}: timed out after {TIMEOUT_S}s")
+            failures += 1
+            continue
+        if proc.returncode != 0:
+            print(f"FAIL {source}: exit {proc.returncode}\n"
+                  f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+            failures += 1
+    print(f"{len(commands) - failures}/{len(commands)} documented commands OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -144,21 +144,19 @@ def bench_seq_length() -> list:
 def bench_image_scaling() -> list:
     import dataclasses
 
+    from repro.workload import workload_for
+
     rows = []
     base_cfg = get_config("stable-diffusion")
     for img in (64, 128, 256, 512):
         cfg = dataclasses.replace(
             with_dtype(base_cfg, jnp.bfloat16), image_size=img,
             name=f"sd{img}")
-        m = build_suite_model(cfg)
+        wl = workload_for(cfg)
         import repro.core.characterize as ch
 
-        params = ch.abstract_params(m)
-        toks = jax.ShapeDtypeStruct((1, 77), jnp.int32)
-        key = jax.random.PRNGKey(0)
         for impl in ("naive", "blocked_jax"):
-            ev = ch.trace_workload(
-                lambda p, t: m.sample(p, t, key, impl=impl), params, toks)
+            ev = ch.trace_generative(wl, impl=impl)
             attn = perf_model.category_time(ev, "attention", TPU_V5E)
             conv = perf_model.category_time(ev, "conv", TPU_V5E)
             rows.append((
@@ -341,13 +339,11 @@ def bench_cascade() -> list:
     Runs the same tiny cascades the acceptance tests pin
     (``repro.configs.tiny``).
 
-    Caveat for the TTV rows: the cascade route serves Make-A-Video's
-    *factorized* sampler (keyframe spatial-only denoise, then temporal
-    refinement), while the lockstep baseline runs the joint VideoUNet every
-    step — its wall-clock delta mixes the scheduling win with the cheaper
-    keyframe stage, and outputs differ numerically.  The TTI rows run the
-    identical per-stage computation on both sides (modulo noise seeds), so
-    they isolate the scheduling effect."""
+    Both sides execute the identical stage composition (the generate()
+    driver under the (seed, rid, stage_index) PRNG contract — the TTV
+    factorized keyframe->temporal sampler included), so the A/B isolates
+    the scheduling effect; outputs match across routes
+    (``bench_route_parity`` records the delta)."""
     from repro.configs.tiny import tiny_cascade_configs
     from repro.serving.engine import ServeConfig, ServeEngine
     from repro.workload import workload_for
@@ -431,12 +427,19 @@ def bench_online() -> list:
         c = eng.stats["cascade"]
         adm, e2e = c["admission"]["wait_ticks"], c["request_latency_ticks"]
         e2e_p95[admission] = e2e["p95"]
+        # tick->wall-clock calibration: req/s + second-denominated tails
+        # alongside the tick latencies (ROADMAP calibration item)
+        e2e_s = eng.stats["request_latency_s"]
         rows.append((
             f"online/{wl.cfg.name}/{admission}", dt / n * 1e6,
             f"throughput_per_tick={n / c['ticks']:.3f}req;"
             f"ticks={c['ticks']};"
             f"admission_wait_p95={adm['p95']:.1f}ticks;"
-            f"e2e_p50={e2e['p50']:.1f}ticks;e2e_p95={e2e['p95']:.1f}ticks",
+            f"e2e_p50={e2e['p50']:.1f}ticks;e2e_p95={e2e['p95']:.1f}ticks;"
+            f"tick_s={eng.stats['clock']['tick_seconds']:.4f}"
+            f"[{eng.stats['clock']['source']}];"
+            f"req_per_s={eng.stats['requests_per_s']:.3f};"
+            f"e2e_p95_s={e2e_s['p95']:.3f}",
         ))
     rows.append((
         f"online/{wl.cfg.name}/continuous_vs_pod", 0.0,
@@ -447,6 +450,85 @@ def bench_online() -> list:
 
 
 bench_online.bench_group = "serving"
+
+
+def bench_route_parity() -> list:
+    """The single-execution-path consolidation, measured: (1) wall-clock
+    overhead of the generate() stage driver vs the pre-refactor monolithic
+    sampler (re-created inline from the model's loop primitives, exactly
+    what ``DiffusionPipeline.sample`` composed before the refactor), (2)
+    per-route per-stage time attribution — now available on the pod route
+    too because it executes the driver — and (3) the route-parity delta
+    (max |pod - cascade| over the served outputs, 0.0 = bit-identical)."""
+    from repro.configs.tiny import TINY_TTI_CASCADE
+    from repro.serving.engine import ServeConfig, ServeEngine
+    from repro.workload import workload_for
+
+    n_req, pod = 4, 2
+    wl = workload_for(TINY_TTI_CASCADE)
+    cfg = wl.cfg
+    model = wl.model
+    params = wl.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, wl.prompt_vocab, size=8) for _ in range(n_req)]
+    toks = jnp.asarray(np.stack(prompts))
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # (1) driver overhead vs the pre-refactor monolithic pipeline
+    def monolithic(params, toks, key):
+        """What model.sample() was before the consolidation: one python
+        function composing the loop primitives with pod-level PRNG."""
+        B = toks.shape[0]
+        ctx = model.encode_text(params, toks)
+        z = jax.random.normal(
+            key, (B, cfg.latent_size, cfg.latent_size, cfg.unet.in_channels),
+            cfg.unet.dtype)
+        img = model.denoise_loop(params["unet"], model.unet, z, ctx,
+                                 cfg.denoise_steps)
+        for i, s in enumerate(cfg.sr_stages):
+            up = jax.image.resize(
+                img, (B, s.out_size, s.out_size, img.shape[-1]), "bilinear")
+            noise = jax.random.normal(
+                jax.random.fold_in(key, i), (B, s.out_size, s.out_size, 3),
+                img.dtype)
+            img = model.denoise_loop(params[f"sr{i}"], model.sr_unets[i],
+                                     noise, ctx, s.steps, cond=up)
+        return img
+
+    t_mono = _time_fn(monolithic, params, toks, key)
+    t_driver = _time_fn(lambda p, t, k: wl.generate(p, t, k), params, toks, key)
+    rows.append((
+        "parity/tiny-tti-cascade/driver_overhead", t_driver,
+        f"monolithic_us={t_mono:.0f};"
+        f"overhead={(t_driver - t_mono) / t_mono:+.1%}",
+    ))
+
+    # (2) + (3): per-route per-stage attribution and the parity delta
+    outs = {}
+    for route in ("auto", "cascade"):
+        eng = ServeEngine(wl, params,
+                          ServeConfig(max_batch=pod, buckets=(8,),
+                                      route=route, queue_capacity=pod))
+        for rid, p in enumerate(prompts):
+            eng.submit(rid, p)
+        outs[route] = eng.run()
+        label = "pod" if route == "auto" else "cascade"
+        stages = (eng.stats["stages"] if route == "auto"
+                  else eng.stats["cascade"]["stages"])
+        attrib = ";".join(f"{name}={st['exec_s']:.3f}s"
+                          for name, st in stages.items())
+        rows.append((f"parity/tiny-tti-cascade/{label}_stage_attribution",
+                     0.0, attrib))
+    delta = max(float(np.max(np.abs(
+        np.asarray(outs["auto"][r], np.float64)
+        - np.asarray(outs["cascade"][r], np.float64)))) for r in outs["auto"])
+    rows.append(("parity/tiny-tti-cascade/route_delta", 0.0,
+                 f"max_abs_diff={delta:.3e};bit_identical={delta == 0.0}"))
+    return rows
+
+
+bench_route_parity.bench_group = "serving"
 
 
 ALL_BENCHES = [
@@ -462,4 +544,5 @@ ALL_BENCHES = [
     bench_conv_kernel,
     bench_cascade,
     bench_online,
+    bench_route_parity,
 ]

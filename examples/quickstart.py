@@ -46,7 +46,7 @@ def main():
           f"(module {rep.attn_module_speedup:.1f}x) — paper Table II")
 
     prof = seq_profile.self_attention_profile(
-        [e for e in base if e.name.startswith("unet")])
+        [e for e in base if e.name.startswith("denoise")])
     period = seq_profile.fundamental_period(prof.seq_lens)
     print(f"[4] sequence-length U-shape over one UNet pass — paper Fig. 7:")
     print(f"    {period}")

@@ -67,6 +67,14 @@ def main():
                     help="online arrival pattern (none = all at tick 0)")
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="poisson: mean arrivals per scheduling tick")
+    ap.add_argument("--arrival-rps", type=float, default=None,
+                    help="poisson/burst rate in requests per SECOND instead "
+                         "of per tick (requires --tick-seconds to map the "
+                         "tick clock to wall time)")
+    ap.add_argument("--tick-seconds", type=float, default=None,
+                    help="wall-clock seconds per scheduling tick; default "
+                         "auto-calibrates from the measured busy-tick "
+                         "service time (reported in stats['clock'])")
     ap.add_argument("--admission", default="continuous",
                     choices=("continuous", "pod"),
                     help="continuous = arrival-pressure pod flush; pod = "
@@ -87,14 +95,28 @@ def main():
                                      stage_impl=parse_stage_impl(args.stage_impl),
                                      admission=args.admission,
                                      temperature=args.temperature,
+                                     tick_seconds=args.tick_seconds,
                                      seed=args.seed))
     cd = workload.cost_descriptor()
     print(f"arch {cfg.name} | route {engine.route} | stages "
           + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
 
-    arrivals = ([0] * args.requests if args.arrivals == "none" else
-                ArrivalTrace(args.arrivals, rate=args.arrival_rate,
-                             seed=args.seed).ticks(args.requests))
+    if args.arrival_rps is not None:
+        if args.tick_seconds is None:
+            raise SystemExit("--arrival-rps needs --tick-seconds to map "
+                             "req/s onto the scheduling-tick clock")
+        if args.arrivals == "none":
+            raise SystemExit("--arrival-rps needs an --arrivals pattern")
+        try:
+            trace = ArrivalTrace.from_rps(args.arrivals, args.arrival_rps,
+                                          args.tick_seconds, seed=args.seed)
+        except ValueError as e:  # rate-less pattern (closed-loop)
+            raise SystemExit(str(e))
+    else:
+        trace = ArrivalTrace(args.arrivals, rate=args.arrival_rate,
+                             seed=args.seed) if args.arrivals != "none" else None
+    arrivals = ([0] * args.requests if trace is None
+                else trace.ticks(args.requests))
     if args.arrivals != "none":
         print(f"arrivals {args.arrivals}: ticks "
               f"{[t if t is not None else 'on-completion' for t in arrivals]}"
@@ -111,8 +133,20 @@ def main():
 
     s = engine.stats
     print(f"served {len(results)} requests in {dt:.2f}s")
+    clock = s.get("clock", {})
+    if clock.get("tick_seconds"):
+        lat = s["request_latency_s"]
+        print(f"  clock [{clock['source']}]: tick = "
+              f"{clock['tick_seconds'] * 1e3:.1f}ms | {s['requests_per_s']:.2f} "
+              f"req/s | e2e p50 {lat['p50'] * 1e3:.0f}ms p95 "
+              f"{lat['p95'] * 1e3:.0f}ms "
+              f"(ticks: p50 {s['request_latency_ticks']['p50']:.0f} "
+              f"p95 {s['request_latency_ticks']['p95']:.0f})")
     for tier, t in s["tier_throughput"].items():
         print(f"  tier {tier}: {t['requests']} reqs, {t['rps']:.2f} req/s")
+    for name, st in s.get("stages", {}).items():
+        print(f"  stage {name}: {st['items']} items / {st['dispatches']} "
+              f"dispatches, {st['exec_s']:.2f}s")
     if engine.route == "cascade":
         c = s["cascade"]
         print(f"  pipeline: {c['ticks']} ticks, stage concurrency max "

@@ -148,27 +148,13 @@ class ARImageModel(Module):
         m = (labels >= 0).astype(jnp.float32)
         return jnp.sum((logz - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
 
-    # -- inference -----------------------------------------------------------
+    # -- decode-loop primitives (driven ONLY by ARImageWorkload.run_stage) ---
 
-    def sample(self, params, text_tokens, key, *, impl="auto", decode_pixels=True):
-        c = self.cfg
-        B = text_tokens.shape[0]
-        with tracer.scope("text_encoder"):
-            ctx = self.text_encoder(params["text"], text_tokens, impl=impl)
-            ctx = self._ctx_proj()(params["ctx_proj"], ctx)
-        if c.decode == "parallel":
-            tokens = self.sample_parallel(params, ctx, key, impl=impl)
-        else:
-            tokens = self.sample_ar(params, ctx, key, impl=impl)
-        if not decode_pixels:
-            return tokens
-        with tracer.scope("vq_decoder"):
-            return self.vq(params["vq"], tokens, impl=impl)
-
-    def sample_parallel(self, params, ctx, key, *, impl="auto"):
+    def decode_parallel(self, params, ctx, *, impl="auto"):
         """Muse parallel decoding: iterative unmasking with a cosine schedule.
         Every step runs the full (constant-length) sequence — the paper's
-        Fig. 7 'Muse' flat profile."""
+        Fig. 7 'Muse' flat profile.  Confidence-based unmasking over greedy
+        predictions is deterministic: no PRNG enters the loop."""
         c = self.cfg
         B = ctx.shape[0]
         S = c.image_tokens
@@ -185,9 +171,7 @@ class ARImageModel(Module):
                 tr.events[i] = tr.events[i].scaled(steps)
             return jnp.argmax(logits, -1).astype(jnp.int32)
 
-        def body(i, carry):
-            tokens, key = carry
-            key, k1 = jax.random.split(key)
+        def body(i, tokens):
             logits = self.backbone(params, tokens, ctx, impl=impl)
             pred = jnp.argmax(logits, -1).astype(jnp.int32)
             conf = jnp.max(jax.nn.log_softmax(logits), -1)
@@ -202,16 +186,15 @@ class ARImageModel(Module):
                 thresh, jnp.maximum(n_unmask - 1, 0)[:, None], axis=-1
             )
             unmask = still_masked & (conf >= cutoff) & (n_unmask > 0)[:, None]
-            tokens = jnp.where(unmask, pred, tokens)
-            return tokens, key
+            return jnp.where(unmask, pred, tokens)
 
-        tokens, _ = jax.lax.fori_loop(0, steps, body, (tokens, key))
+        tokens = jax.lax.fori_loop(0, steps, body, tokens)
         # any residual masks -> argmax fill
         logits = self.backbone(params, tokens, ctx, impl=impl)
         pred = jnp.argmax(logits, -1).astype(jnp.int32)
         return jnp.where(tokens == self.mask_token, pred, tokens)
 
-    def sample_ar(self, params, ctx, key, *, impl="auto"):
+    def decode_ar(self, params, ctx, *, impl="auto"):
         """Parti autoregressive decoding with a KV cache (LLM-Decode-like)."""
         c = self.cfg
         B = ctx.shape[0]

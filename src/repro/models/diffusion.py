@@ -158,11 +158,12 @@ class DiffusionPipeline(Module):
                          t.astype(jnp.float32), ctx, impl=impl)
         return jnp.mean((pred.astype(jnp.float32) - eps) ** 2)
 
-    # -- inference ----------------------------------------------------------
+    # -- inference stage primitives (driven ONLY by the workload's
+    # run_stage; the per-stage tracer scopes are emitted by the
+    # GenerativeWorkload.generate driver, not here) -------------------------
 
     def encode_text(self, params, tokens, *, impl="auto"):
-        with tracer.scope("text_encoder"):
-            return self.text_encoder(params["text"], tokens, impl=impl)
+        return self.text_encoder(params["text"], tokens, impl=impl)
 
     def denoise_loop(self, params_unet, unet: UNet2D, z, ctx, steps, *,
                      cond=None, impl="auto", start=0, stop=None):
@@ -179,37 +180,3 @@ class DiffusionPipeline(Module):
 
         return ddim_range(unet_eps, z, steps, start,
                           steps if stop is None else stop)
-
-    def sample(self, params, tokens, key, *, impl="auto", return_latents=False):
-        """Full TTI inference: text -> denoise -> decode (paper Fig. 2)."""
-        cfg = self.cfg
-        B = tokens.shape[0]
-        ctx = self.encode_text(params, tokens, impl=impl)
-        hw = cfg.latent_size
-        z = jax.random.normal(key, (B, hw, hw, cfg.unet.in_channels), cfg.unet.dtype)
-        with tracer.scope("unet"):
-            z = self.denoise_loop(params["unet"], self.unet, z, ctx,
-                                  cfg.denoise_steps, impl=impl)
-        if cfg.kind == "latent":
-            if return_latents or self.vae is None:
-                return z
-            with tracer.scope("vae"):
-                return self.vae(params["vae"], z, impl=impl)
-        # pixel cascade: base image then SR stages conditioned on upsampled lowres
-        img = z
-        for i, stage in enumerate(cfg.sr_stages):
-            B_, H, W, C = img.shape
-            up = jax.image.resize(
-                img, (B_, stage.out_size, stage.out_size, C), "bilinear"
-            )
-            noise = jax.random.normal(
-                jax.random.fold_in(key, i),
-                (B_, stage.out_size, stage.out_size, 3),
-                img.dtype,
-            )
-            with tracer.scope(f"sr{i}"):
-                img = self.denoise_loop(
-                    params[f"sr{i}"], self.sr_unets[i], noise, ctx, stage.steps,
-                    cond=up, impl=impl,
-                )
-        return img

@@ -603,26 +603,9 @@ class TransformerLM(Module):
             logits = self._lm_head()(params["lm_head"], x)
         return logits, new_caches
 
-    def generate(self, params, tokens, key=None, *, max_new_tokens: int = 16,
-                 impl="auto"):
-        """Greedy prefill+decode: (B, S) prompt -> (B, max_new_tokens) ids.
-
-        The GenerativeWorkload inference entry point; the serve engine uses
-        the same prefill/decode_step pair but drives them per bucket."""
-        del key  # greedy decoding is deterministic
-        B, S = tokens.shape
-        logits, caches, context = self.prefill(
-            params, tokens, impl=impl, max_len=S + max_new_tokens)
-        out = []
-        cur = jnp.int32(S)
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        for _ in range(max_new_tokens):
-            out.append(nxt)
-            logits, caches = self.decode_step(params, nxt, caches, cur,
-                                              context=context, impl=impl)
-            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
-            cur = cur + 1
-        return jnp.concatenate(out, axis=1)
+    # Full-pipeline generation lives in ``LMWorkload`` (the prefill/decode
+    # stage contract driven by ``GenerativeWorkload.generate``); this model
+    # exposes only the ``prefill``/``decode_step`` primitives.
 
 
 def _to_capacity(kv: AttentionCache, S: int, max_len: int, *, window=None) -> AttentionCache:

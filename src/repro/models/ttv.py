@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import tracer
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.models.diffusion import ddim_range, ddpm_alphas
+from repro.models.diffusion import ddpm_alphas
 from repro.models.layers.basic import Dense, Embedding, nbytes
 from repro.models.layers.conv import TemporalConv1D
 from repro.models.layers.norms import LayerNorm
@@ -214,23 +214,10 @@ class MakeAVideoPipeline(Module):
                                t.astype(jnp.float32), ctx, impl=impl)
         return jnp.mean((pred.astype(jnp.float32) - eps) ** 2)
 
-    def sample(self, params, tokens, key, *, impl="auto"):
-        cfg = self.cfg
-        B = tokens.shape[0]
-        with tracer.scope("text_encoder"):
-            ctx = self.text_encoder(params["text"], tokens, impl=impl)
-        hw = cfg.image_size // cfg.latent_down
-        z = jax.random.normal(
-            key, (B, cfg.frames, hw, hw, cfg.unet.in_channels), cfg.dtype
-        )
-
-        def video_eps(z, t):
-            return self.video_unet(params["vunet"], z,
-                                   jnp.full((B,), t, jnp.float32), ctx,
-                                   impl=impl)
-
-        steps = cfg.denoise_steps
-        return ddim_range(video_eps, z, steps, 0, steps)
+    # Inference is driven ONLY by MakeAVideoWorkload.run_stage: the
+    # factorized keyframe (spatial-only) -> temporal-refinement sampler is
+    # the one sampler definition on every serve route (there is no separate
+    # joint-schedule pipeline driver anymore).
 
 
 # ---------------------------------------------------------------------------
@@ -377,15 +364,10 @@ class PhenakiModel(Module):
         m = (labels >= 0).astype(jnp.float32)
         return jnp.sum((logz - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
 
-    def sample(self, params, text_tokens, key, *, impl="auto"):
-        with tracer.scope("text_encoder"):
-            ctx = self.text_encoder(params["text"], text_tokens, impl=impl)
-            ctx = self._ctx_proj()(params["ctx_proj"], ctx)
-        return self.decode_tokens(params, ctx, key, impl=impl)
-
-    def decode_tokens(self, params, ctx, key, *, impl="auto"):
+    def decode_tokens(self, params, ctx, *, impl="auto"):
         """MaskGit-style parallel decode from a precomputed text context —
-        the cascade ``parallel_decode`` stage entry point."""
+        the ``parallel_decode`` stage entry point (confidence-based
+        unmasking over greedy predictions: deterministic, no PRNG)."""
         c = self.cfg
         B = ctx.shape[0]
         S = c.frames * c.tokens_per_frame
@@ -402,8 +384,7 @@ class PhenakiModel(Module):
                 tr.events[i] = tr.events[i].scaled(steps)
             return jnp.argmax(logits, -1).astype(jnp.int32)
 
-        def body(i, carry):
-            tokens, key = carry
+        def body(i, tokens):
             logits = self.backbone(params, tokens, ctx, impl=impl)
             pred = jnp.argmax(logits, -1).astype(jnp.int32)
             conf = jnp.max(jax.nn.log_softmax(logits), -1)
@@ -417,9 +398,9 @@ class PhenakiModel(Module):
                 order, jnp.maximum(n_unmask - 1, 0)[:, None], -1
             )
             unmask = still & (conf >= cutoff) & (n_unmask > 0)[:, None]
-            return jnp.where(unmask, pred, tokens), jax.random.fold_in(key, i)
+            return jnp.where(unmask, pred, tokens)
 
-        tokens, _ = jax.lax.fori_loop(0, steps, body, (tokens, key))
+        tokens = jax.lax.fori_loop(0, steps, body, tokens)
         logits = self.backbone(params, tokens, ctx, impl=impl)
         pred = jnp.argmax(logits, -1).astype(jnp.int32)
         return jnp.where(tokens == self.mask_token, pred, tokens)

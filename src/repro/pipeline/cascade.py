@@ -114,8 +114,8 @@ class CascadePipeline:
         impls = resolve_stage_impls(self.stages, impl, stage_impl)
         self.executors = [
             StageExecutor(workload, s, impl=im, max_batch=b,
-                          temperature=temperature)
-            for s, b, im in zip(self.stages, batches, impls)
+                          temperature=temperature, stage_index=i)
+            for i, (s, b, im) in enumerate(zip(self.stages, batches, impls))
         ]
         # buffers[i] feeds stage i; buffers[0] is the (unbounded) admission
         # queue — the serving scheduler is its backpressure
@@ -124,8 +124,10 @@ class CascadePipeline:
                         capacity=None if i == 0 else self.queue_capacity)
             for i, s in enumerate(self.stages)
         ]
+        # the base seed key of the (seed, rid, stage_index) PRNG contract:
+        # executors fold per-request keys from it, so a request's noise is
+        # independent of which stage-batch serves it (route parity)
         self._key = jax.random.PRNGKey(seed)
-        self._nkey = 0
         self.submitted = 0
         self.completed = 0
         self.ticks = 0
@@ -167,9 +169,7 @@ class CascadePipeline:
             tasks = buf.pop_group(min(ex.max_batch, room), now=self.ticks)
             if not tasks:
                 continue
-            key = jax.random.fold_in(self._key, self._nkey)
-            self._nkey += 1
-            new_tasks = ex.run_batch(self.params, tasks, key)
+            new_tasks = ex.run_batch(self.params, tasks, self._key)
             executed += 1
             self.executed.append((i, len(tasks)))
             if out_buf is None:

@@ -184,12 +184,19 @@ class StageExecutor:
     tier requested for *this stage* (``ServeConfig.stage_impl`` override or
     the engine-wide default), ``effective_impl`` what actually runs after
     the off-TPU ``pallas -> interpret`` degrade.  Per-batch wall time and
-    batch-size samples feed the ``summary()`` tail-latency report."""
+    batch-size samples feed the ``summary()`` tail-latency report.
+
+    ``stage_index`` is the stage's position in the cost descriptor — what
+    the suite-wide ``stage_key(seed, rid, stage_index)`` PRNG contract
+    folds, so a request's noise is identical to the ``generate`` driver's
+    no matter which stage-batch it lands in."""
 
     def __init__(self, workload, stage, *, impl: str = "auto",
-                 max_batch: int = 4, temperature: float = 0.0):
+                 max_batch: int = 4, temperature: float = 0.0,
+                 stage_index: int = 0):
         self.workload = workload
         self.stage = stage
+        self.stage_index = stage_index
         self.impl = impl  # requested tier (stage override or engine default)
         self.effective_impl = effective_tier(impl)
         self.max_batch = max_batch
@@ -207,12 +214,20 @@ class StageExecutor:
 
     def run_batch(self, params, tasks: list[StageTask], key) -> list[StageTask]:
         """Execute the stage over ``tasks`` as one batch; returns the tasks
-        with their post-stage states."""
+        with their post-stage states.  ``key`` is the pipeline's base seed
+        key — per-request keys are derived here via the shared
+        ``stage_key`` fold, and the dispatch runs under the same per-stage
+        tracer scope the ``generate`` driver emits."""
+        from repro.core import tracer
+        from repro.workload.base import stage_keys
+
         batched = stack_states([t.state for t in tasks])
+        keys = stage_keys(key, [t.rid for t in tasks], self.stage_index)
         t0 = time.perf_counter()
-        new = self.workload.run_stage(params, self.stage, batched, key,
-                                      impl=self.effective_impl,
-                                      temperature=self.temperature)
+        with tracer.scope(self.stage.name):
+            new = self.workload.run_stage(params, self.stage, batched, keys,
+                                          impl=self.effective_impl,
+                                          temperature=self.temperature)
         new = jax.block_until_ready(new)
         dt = time.perf_counter() - t0
         self.exec_s += dt

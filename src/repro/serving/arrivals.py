@@ -11,7 +11,10 @@ reproducible.
 
 One tick is one ``ServeEngine.step()`` call (one pipeline scheduling round),
 so ``rate`` is "requests per scheduling round", not wall-clock seconds —
-the trace is hardware-independent and deterministic.
+the trace is hardware-independent and deterministic.  To state rates in
+requests/second against a real host, use :meth:`ArrivalTrace.from_rps` with
+a ``tick_seconds`` calibration (``ServeConfig.tick_seconds``, or the
+engine's measured value in ``stats["clock"]``).
 """
 
 from __future__ import annotations
@@ -78,6 +81,33 @@ class ArrivalTrace:
         if self.pattern == "closed-loop" and self.concurrency < 1:
             raise ValueError(
                 f"closed-loop concurrency must be >= 1, got {self.concurrency}")
+
+    @classmethod
+    def from_rps(cls, pattern: str, rps: float, tick_seconds: float,
+                 **kw) -> "ArrivalTrace":
+        """Build a trace whose rate is stated in **requests per second**,
+        converted onto the tick clock via ``tick_seconds`` (configure it or
+        read the calibrated value from ``ServeEngine.tick_seconds()`` /
+        ``engine.stats["clock"]`` — the ROADMAP tick->wall-clock item).
+
+        ``poisson``: ``rate = rps * tick_seconds`` arrivals per tick.
+        ``burst``: ``burst_gap`` is derived so each ``burst_size`` front
+        sustains ``rps`` on average.  Rate-less patterns (``closed-loop``
+        is concurrency-, not rate-bound) raise rather than silently drop
+        the requested rate."""
+        if tick_seconds <= 0:
+            raise ValueError(f"tick_seconds must be > 0, got {tick_seconds}")
+        if rps <= 0:
+            raise ValueError(f"rps must be > 0, got {rps}")
+        if pattern == "poisson":
+            return cls(pattern, rate=rps * tick_seconds, **kw)
+        if pattern == "burst":
+            size = kw.pop("burst_size", cls.burst_size)
+            gap = max(1, round(size / (rps * tick_seconds)))
+            return cls(pattern, burst_size=size, burst_gap=gap, **kw)
+        raise ValueError(
+            f"pattern {pattern!r} has no arrival rate (closed-loop is "
+            f"bound by `concurrency`); construct ArrivalTrace directly")
 
     def ticks(self, n: int) -> list:
         """Arrival ticks for ``n`` requests, non-decreasing.

@@ -1,19 +1,25 @@
 """Modality-agnostic serving engine over the GenerativeWorkload API.
 
-One ``submit/step/run`` surface for every suite model:
+One ``submit/step/run`` surface for every suite model, and ONE execution
+path behind it: every route drives the workload's canonical stage
+composition (``GenerativeWorkload.generate`` -> ``run_stage``) under the
+shared ``stage_key(seed, rid, stage_index)`` PRNG contract, so outputs are
+bit-identical across routes and ``ServeConfig.stage_impl`` per-stage tier
+overrides + per-stage time attribution apply everywhere.  The routes differ
+only in *scheduling*:
 
   * **LM route** (Table III Prefill/Decode): requests are admitted through
-    the bucketed scheduler, then served by delegating to the workload's own
-    stage machinery (``LMWorkload.run_stage`` prefill + decode) — one greedy
-    /temperature decode loop shared with the cascade route.  Per-batch
-    ``padding_waste`` — the §V-B bucket-quantum trade — lands in ``stats``.
+    the bucketed scheduler, then served through the stage driver (prefill +
+    decode) — one greedy/temperature decode loop shared with every route.
+    Per-batch ``padding_waste`` — the §V-B bucket-quantum trade — lands in
+    ``stats``.
   * **Pod route** (diffusion / AR-image / TTV): requests accumulate into
-    denoise pods; each pod runs the full generation pipeline as one batch
-    while ``DenoisePodScheduler`` staggers the pod's step indices (paper
-    §V-A) — the resulting ``bandwidth_profile`` (aligned vs staggered HBM
-    peak) is reported in ``stats``.
+    denoise pods; each pod runs the stage driver as one batch while
+    ``DenoisePodScheduler`` staggers the pod's step indices (paper §V-A) —
+    the resulting ``bandwidth_profile`` (aligned vs staggered HBM peak) is
+    reported in ``stats``.
   * **Cascade route** (``ServeConfig(route="cascade")``, any workload): pods
-    feed ``repro.pipeline.CascadePipeline``, which executes the workload's
+    feed ``repro.pipeline.CascadePipeline``, which executes the same
     ``CostDescriptor.stages`` as a stage-level pipeline — cross-request
     batching per stage, bounded latent-handoff queues, per-stage tail
     latency (p50/p95 queue-wait ticks + service time) and kernel-tier
@@ -50,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pipeline import CascadePipeline, percentiles, split_state, stack_states
+from repro.pipeline import CascadePipeline, percentiles, resolve_stage_impls
 from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
@@ -58,6 +64,7 @@ from repro.serving.scheduler import (
     bucket_of,
 )
 from repro.workload import GenerativeWorkload, workload_for
+from repro.workload.base import SERVE_ROUTES
 
 
 @dataclasses.dataclass
@@ -66,11 +73,23 @@ class ServeConfig:
 
     ``temperature`` is the LM sampling temperature (0 = greedy, bit-stable);
     ``impl`` the engine-wide kernel tier, with ``stage_impl`` overriding it
-    per cascade stage by exact name or prefix (``{"sr": "pallas"}`` puts
-    every SR stage on the Pallas kernel while the rest keep ``impl``);
+    per stage by exact name or prefix (``{"sr": "pallas"}`` puts every SR
+    stage on the Pallas kernel while the rest keep ``impl``) — honored on
+    **every** route, since all routes execute the same stage driver;
     ``admission`` selects the online pod-admission policy — ``"continuous"``
     flushes a partial pod after ``arrival_flush_wait`` ticks of arrival
-    pressure, ``"pod"`` holds partials until arrivals fill them."""
+    pressure, ``"pod"`` holds partials until arrivals fill them.
+
+    ``route`` selects the *serve* route: ``"auto"`` uses the workload's
+    native route (``"lm"`` or ``"pod"``), ``"cascade"`` forces stage-level
+    pipeline serving (see the route-taxonomy note in
+    ``repro.workload.base``).
+
+    ``tick_seconds`` maps the engine's scheduling-tick clock to wall time:
+    ``None`` auto-calibrates from the measured median busy-tick service
+    time (median: robust to the JIT-compile outlier on first-shape ticks),
+    so arrival rates and tail latencies can be stated in requests/second
+    and seconds (``engine.stats["clock"]``)."""
 
     max_batch: int = 4
     max_len: int = 256
@@ -79,11 +98,12 @@ class ServeConfig:
     pod_size: int = 0  # 0 -> max_batch
     seed: int = 0
     impl: str = "auto"  # kernel tier threaded down to generate/run_stage
-    stage_impl: dict | None = None  # per-cascade-stage tier overrides
+    stage_impl: dict | None = None  # per-stage tier overrides (any route)
     route: str = "auto"  # "auto" (workload default) | "cascade"
     queue_capacity: int = 8  # cascade inter-stage handoff buffer depth
     admission: str = "continuous"  # "continuous" | "pod" (online pod flush)
     arrival_flush_wait: int = 2  # ticks a partial pod waits before flushing
+    tick_seconds: float | None = None  # None -> calibrate from measurement
 
     @property
     def resolved_pod_size(self) -> int:
@@ -94,6 +114,15 @@ class ServeConfig:
             raise ValueError(
                 f"unknown admission policy {self.admission!r} "
                 f"(expected 'continuous' or 'pod')")
+        if self.route not in ("auto",) + SERVE_ROUTES:
+            raise ValueError(
+                f"unknown serve route {self.route!r} (expected 'auto' or "
+                f"one of {SERVE_ROUTES}; workload routes are documented in "
+                f"repro.workload.base)")
+        if self.tick_seconds is not None and self.tick_seconds <= 0:
+            raise ValueError(
+                f"tick_seconds must be > 0 (or None to auto-calibrate), "
+                f"got {self.tick_seconds}")
 
 
 class ServeEngine:
@@ -110,14 +139,21 @@ class ServeEngine:
         self.cost = workload.cost_descriptor()
         self.route = (workload.route if serve_cfg.route == "auto"
                       else serve_cfg.route)
-        if self.route not in ("lm", "pod", "cascade"):
-            raise ValueError(f"unknown route {self.route!r}")
-        if serve_cfg.stage_impl and self.route != "cascade":
+        if self.route not in SERVE_ROUTES:
             raise ValueError(
-                "stage_impl is a cascade-route knob; the lm/pod routes run "
-                "one tier end-to-end (ServeConfig.impl)")
+                f"unknown serve route {self.route!r} (expected one of "
+                f"{SERVE_ROUTES}; the workload route — "
+                f"{workload.route!r} here — names the scheduler family, "
+                f"see repro.workload.base)")
+        # validate per-stage tier overrides up front on EVERY route (a typo
+        # must not silently serve the default tier); all routes execute the
+        # same stage driver, so the overrides apply everywhere
+        resolve_stage_impls(self.cost.stages, serve_cfg.impl,
+                            serve_cfg.stage_impl)
         self.stats: dict = {"requests": 0, "impl": serve_cfg.impl,
-                            "tier_throughput": {}}
+                            "tier_throughput": {},
+                            "stage_impl": dict(serve_cfg.stage_impl or {}),
+                            "stages": {}}
         self.pipeline = None
         # -- online-serving clock + arrival queues ---------------------------
         self._tick = 0  # one tick == one step() call
@@ -128,6 +164,8 @@ class ServeEngine:
         self._arrival_tick: dict[int, int] = {}
         self._admission_waits: list[int] = []  # arrival -> pipeline admission
         self._e2e_ticks: list[int] = []  # arrival -> completion
+        self._completed = 0
+        self._busy_wall_s: list[float] = []  # per-tick wall s (work done)
 
         if self.route == "cascade":
             # DenoisePodScheduler-staggered pods feed the stage pipeline:
@@ -146,13 +184,10 @@ class ServeEngine:
                 seed=serve_cfg.seed,
             )
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[],
-                              stage_impl=dict(serve_cfg.stage_impl or {}),
                               cascade={})
         elif self.route == "lm":
             self.scheduler = BucketedScheduler(serve_cfg.buckets,
                                                serve_cfg.max_batch)
-            self._lm_stages = {s.name: s for s in self.cost.stages}
-            self._batch_index = 0
             self.stats.update(prefill_s=0.0, decode_s=0.0, tokens=0,
                               padding_waste=[])
         else:
@@ -161,7 +196,6 @@ class ServeEngine:
                 total_steps=self.cost.iterative_steps(),
             )
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[])
-        self._pod_index = 0
 
     def _record_tier(self, n_done: int, wall_s: float) -> None:
         """Per-``impl``-tier served-request throughput; stage-level tier
@@ -171,6 +205,20 @@ class ServeEngine:
         t["requests"] += n_done
         t["wall_s"] += wall_s
         t["rps"] = t["requests"] / t["wall_s"] if t["wall_s"] else 0.0
+
+    def _record_stage(self, name: str, wall_s: float, batch: int) -> None:
+        """Per-stage time attribution for the driver-executed routes (the
+        ``on_stage`` hook of ``GenerativeWorkload.generate``).  The cascade
+        route's richer per-stage report lives in ``stats["cascade"]``; the
+        legacy lm keys (``prefill_s``/``decode_s``) stay mirrored."""
+        s = self.stats["stages"].setdefault(
+            name, {"exec_s": 0.0, "items": 0, "dispatches": 0})
+        s["exec_s"] += wall_s
+        s["items"] += batch
+        s["dispatches"] += 1
+        legacy = {"prefill": "prefill_s", "decode": "decode_s"}
+        if name in legacy and legacy[name] in self.stats:
+            self.stats[legacy[name]] += wall_s
 
     # -- submission ----------------------------------------------------------
 
@@ -285,43 +333,38 @@ class ServeEngine:
             toks = toks.at[i, : r.prompt_len].set(r.state["prompt"])
         return toks
 
+    def _drive(self, requests: list, width: int) -> list:
+        """Execute one batch of scheduled requests through THE stage driver
+        (``GenerativeWorkload.generate_requests``): every route serves the
+        same ``init_stage_state -> run_stage* -> stage_output`` composition
+        under the ``stage_key(seed, rid, stage_index)`` PRNG contract, with
+        ``ServeConfig.stage_impl`` per-stage tier overrides and per-stage
+        time attribution (``stats["stages"]``) applied on every route."""
+        toks = self._pad_prompts(requests, width)
+        return self.workload.generate_requests(
+            self.params, toks, jax.random.PRNGKey(self.serve_cfg.seed),
+            impl=self.serve_cfg.impl,
+            stage_impl=self.serve_cfg.stage_impl,
+            temperature=self.serve_cfg.temperature,
+            max_new_tokens=[r.max_new_tokens for r in requests],
+            rids=[r.rid for r in requests],
+            on_stage=self._record_stage)
+
     def _step_lm(self) -> list[tuple[int, Any]]:
-        """Serve one bucketed batch by delegating to the workload's own
-        prefill/decode stages (``LMWorkload.run_stage``) — the same decode
-        loop the cascade route runs, so greedy tokens are identical across
-        routes and ``ServeConfig.temperature`` sampling lives in one place."""
+        """Serve one bucketed batch through the stage driver — the same
+        prefill/decode loop the cascade route runs, so greedy tokens are
+        identical across routes and ``ServeConfig.temperature`` sampling
+        lives in one place."""
         t_step = time.perf_counter()
         bucket, batch = self.scheduler.next_batch()
         if not batch:
             return []
         self.stats["padding_waste"].append(
             self.scheduler.padding_waste(batch, bucket))
-        toks = self._pad_prompts(batch, bucket)
-        state = stack_states([
-            self.workload.init_stage_state(toks[i],
-                                           max_new_tokens=r.max_new_tokens)
-            for i, r in enumerate(batch)
-        ])
-        key = jax.random.fold_in(
-            jax.random.PRNGKey(self.serve_cfg.seed), self._batch_index)
-        self._batch_index += 1
-
-        t0 = time.perf_counter()
-        state = self.workload.run_stage(
-            self.params, self._lm_stages["prefill"], state, key,
-            impl=self.serve_cfg.impl, temperature=self.serve_cfg.temperature)
-        self.stats["prefill_s"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        state = self.workload.run_stage(
-            self.params, self._lm_stages["decode"], state, key,
-            impl=self.serve_cfg.impl, temperature=self.serve_cfg.temperature)
-        self.stats["decode_s"] += time.perf_counter() - t0
+        outs = self._drive(batch, bucket)
         self.stats["tokens"] += (
             max(r.max_new_tokens for r in batch) * len(batch))
         self._record_tier(len(batch), time.perf_counter() - t_step)
-        outs = [self.workload.stage_output(s)
-                for s in split_state(state, len(batch))]
         return [(r.rid, [int(t) for t in outs[i]])
                 for i, r in enumerate(batch)]
 
@@ -337,19 +380,13 @@ class ServeEngine:
         # instantaneous-HBM-demand flattening vs the aligned baseline
         self._record_pod_profile(pod)
 
-        width = max(r.prompt_len for r in pod)
-        toks = self._pad_prompts(pod, width)
-        key = jax.random.fold_in(
-            jax.random.PRNGKey(self.serve_cfg.seed), self._pod_index)
-        self._pod_index += 1
         t0 = time.perf_counter()
-        out = self.workload.generate(self.params, toks, key,
-                                     impl=self.serve_cfg.impl)
-        out = jax.block_until_ready(out)
+        outs = self._drive(pod, max(r.prompt_len for r in pod))
+        outs = [jax.block_until_ready(o) for o in outs]
         dt = time.perf_counter() - t0
         self.stats["generate_s"] += dt
         self._record_tier(len(pod), dt)
-        return [(r.rid, np.asarray(out[i])) for i, r in enumerate(pod)]
+        return [(r.rid, np.asarray(outs[i])) for i, r in enumerate(pod)]
 
     # -- cascade route -------------------------------------------------------
 
@@ -399,22 +436,66 @@ class ServeEngine:
         scheduled batch / pod / pipeline round, release closed-loop
         requests for completions.  Returns completed ``(rid, out)`` pairs
         (often empty mid-pipeline)."""
+        t0 = time.perf_counter()
         self._admit_arrivals()
         if self.route == "cascade":
+            n_exec = len(self.pipeline.executed)
             done = self._step_cascade()
+            busy = len(self.pipeline.executed) > n_exec
         elif self.route == "lm":
             done = self._step_lm()
+            busy = bool(done)
         else:
             done = self._step_pod()
+            busy = bool(done)
+        if busy:  # tick->wall-clock calibration sample (busy ticks only)
+            self._busy_wall_s.append(time.perf_counter() - t0)
+        self._completed += len(done)
         for rid, _ in done:
             if rid in self._arrival_tick:
                 self._e2e_ticks.append(self._tick - self._arrival_tick[rid])
             if self._closed_loop:  # one completion releases one waiter
                 self._enqueue(self._closed_loop.popleft(), self._tick)
         self._tick += 1
-        if self.route == "cascade" and not self.pending():
-            self._finalize_cascade_stats()
+        if not self.pending():
+            if self.route == "cascade":
+                self._finalize_cascade_stats()
+            self._finalize_clock()
         return done
+
+    # -- tick -> wall-clock calibration --------------------------------------
+
+    def tick_seconds(self) -> float:
+        """Wall-clock seconds per scheduling tick: the configured
+        ``ServeConfig.tick_seconds``, else the measured MEDIAN busy-tick
+        service time (the ROADMAP calibration item) — what lets tick-based
+        arrival rates and latencies be stated in req/s and seconds.  The
+        median, not the mean: the first busy tick of each compiled shape pays
+        XLA trace+compile, and on short runs that outlier would dominate a
+        mean and inflate every second-denominated stat derived from it."""
+        if self.serve_cfg.tick_seconds is not None:
+            return float(self.serve_cfg.tick_seconds)
+        if self._busy_wall_s:
+            return float(np.median(self._busy_wall_s))
+        return 0.0
+
+    def _finalize_clock(self) -> None:
+        """``stats["clock"]`` + wall-clock req/s and tail latencies derived
+        from the tick clock (schema in ``docs/serving.md``)."""
+        ts = self.tick_seconds()
+        self.stats["clock"] = {
+            "tick_seconds": ts,
+            "source": ("configured" if self.serve_cfg.tick_seconds is not None
+                       else "calibrated"),
+            "ticks": self._tick,
+            "busy_ticks": len(self._busy_wall_s),
+        }
+        lat_ticks = percentiles(self._e2e_ticks)
+        self.stats["request_latency_ticks"] = lat_ticks
+        self.stats["request_latency_s"] = {k: v * ts
+                                           for k, v in lat_ticks.items()}
+        wall = self._tick * ts
+        self.stats["requests_per_s"] = (self._completed / wall) if wall else 0.0
 
     def pending(self) -> int:
         """Requests anywhere in the system: deferred arrivals, scheduler

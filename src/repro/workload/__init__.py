@@ -6,6 +6,8 @@ resolves any registered config (LM, diffusion, AR-image, TTV) to its
 """
 
 from repro.workload.base import (
+    SERVE_ROUTES,
+    WORKLOAD_ROUTES,
     CostDescriptor,
     GenRequest,
     GenerativeWorkload,
@@ -14,6 +16,8 @@ from repro.workload.base import (
     reduced_config,
     reduced_workload,
     register_workload,
+    stage_key,
+    stage_keys,
     workload_for,
     workload_types,
 )
@@ -30,6 +34,8 @@ from repro.workload.ar_image import ARImageWorkload
 from repro.workload.ttv import MakeAVideoWorkload, PhenakiWorkload
 
 __all__ = [
+    "SERVE_ROUTES",
+    "WORKLOAD_ROUTES",
     "CostDescriptor",
     "GenRequest",
     "GenerativeWorkload",
@@ -38,6 +44,8 @@ __all__ = [
     "reduced_config",
     "reduced_workload",
     "register_workload",
+    "stage_key",
+    "stage_keys",
     "workload_for",
     "workload_types",
     "LMWorkload",

@@ -68,24 +68,22 @@ class ARImageWorkload(GenerativeWorkload):
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
                   temperature: float = 0.0):
-        del temperature  # AR/parallel image samplers own their sampling rules
+        del key, temperature  # greedy/confidence decode rules: deterministic
         model = self.model
         if stage.name == "text_encoder":
-            with tracer.scope("text_encoder"):
-                ctx = model.text_encoder(params["text"], state["tokens"],
-                                         impl=impl)
-                ctx = model._ctx_proj()(params["ctx_proj"], ctx)
+            ctx = model.text_encoder(params["text"], state["tokens"],
+                                     impl=impl)
+            ctx = model._ctx_proj()(params["ctx_proj"], ctx)
             return {"ctx": ctx}
         if stage.name == "parallel_decode":
-            return {"img_tokens": model.sample_parallel(params, state["ctx"],
-                                                        key, impl=impl)}
+            return {"img_tokens": model.decode_parallel(params, state["ctx"],
+                                                        impl=impl)}
         if stage.name == "ar_decode":
-            return {"img_tokens": model.sample_ar(params, state["ctx"], key,
+            return {"img_tokens": model.decode_ar(params, state["ctx"],
                                                   impl=impl)}
         if stage.name == "vq_decoder":
-            with tracer.scope("vq_decoder"):
-                return {"out": model.vq(params["vq"], state["img_tokens"],
-                                        impl=impl)}
+            return {"out": model.vq(params["vq"], state["img_tokens"],
+                                    impl=impl)}
         raise ValueError(f"unknown AR-image stage {stage.name!r}")
 
     def trace_events(self, impl: str = "auto") -> list:
@@ -94,20 +92,33 @@ class ARImageWorkload(GenerativeWorkload):
             return super().trace_events(impl)
         # Parti AR: text enc + vq once, plus decode steps at sampled cache
         # lengths scaled to the full token count (Fig. 7 linear growth).
+        # Events are scoped by descriptor stage name, exactly like the
+        # generate() driver's per-stage scopes, so characterization and
+        # served execution attribute time to the same stages.
         model = self.model
-        key = jax.random.PRNGKey(0)
         params = characterize.abstract_params(model)
         (toks,) = self.trace_inputs()
-        ev = characterize.trace_workload(
-            lambda p, t: model.text_encoder(p["text"], t, impl=impl),
-            params, toks)
+        with tracer.trace() as tr:
+            with tracer.scope("text_encoder"):
+                jax.eval_shape(
+                    lambda p, t: model.text_encoder(p["text"], t, impl=impl),
+                    params, toks)
+        ev = tr.events
         S = cfg.image_tokens
         sample_points = 8
         for i in range(sample_points):
             cur = max(1, (i * S) // sample_points)
             step_ev = self._ar_step_events(params, cur, impl)
+            step_ev = [dataclasses.replace(e, name=f"ar_decode/{e.name}")
+                       for e in step_ev]
             ev += tracer.scale_events(step_ev, S // sample_points)
-        return ev
+        img_tokens = jax.ShapeDtypeStruct((1, cfg.image_tokens), jnp.int32)
+        with tracer.trace() as tr:
+            with tracer.scope("vq_decoder"):
+                jax.eval_shape(
+                    lambda p, t: model.vq(p["vq"], t, impl=impl),
+                    params, img_tokens)
+        return ev + tr.events
 
     def _ar_step_events(self, params_abs, cur: int, impl: str):
         """One AR decode step against a cache of length ``cur`` (abstract)."""

@@ -7,8 +7,11 @@ characterizer, and every benchmark should be written once against
 
   * ``init(key)``                 — materialize parameters
   * ``prepare_request(...)``      — modality-specific inputs -> ``GenRequest``
-  * ``generate(params, tokens, key)`` — the full inference pipeline
+  * ``generate(params, tokens, key)`` — the canonical stage composition:
+    ``init_stage_state`` -> the descriptor's stage sequence via
+    ``run_stage`` -> ``stage_output`` (there is no other pipeline driver)
   * ``trace_inputs()`` / ``trace_events(impl)`` — abstract characterization
+    (traces the same ``generate`` driver served execution runs)
   * ``cost_descriptor()``         — the stage/step structure (denoise steps,
     decode steps, SR stages) that schedulers consume
 
@@ -29,6 +32,53 @@ from typing import Any, Callable
 import numpy as np
 
 # ---------------------------------------------------------------------------
+# Route taxonomy (THE one place it is defined)
+# ---------------------------------------------------------------------------
+#
+# Two distinct notions share the word "route":
+#
+# * **workload route** — ``GenerativeWorkload.route`` / ``GenRequest.route``
+#   / ``CostDescriptor.route``: which *scheduler family* the workload's
+#   requests natively belong to.  ``"lm"`` = bucketed prefill+decode
+#   (paper §V-B), ``"pod"`` = staggered denoise pods (paper §V-A).
+# * **serve route** — how ``ServeEngine`` actually executes: the two
+#   workload routes plus ``"cascade"`` (stage-level pipeline serving,
+#   paper §IV-C), selected by ``ServeConfig.route``.  Every serve route
+#   executes through the same stage driver (``generate``/``run_stage``),
+#   so outputs are bit-identical across routes under the shared PRNG
+#   contract below.
+
+WORKLOAD_ROUTES = ("lm", "pod")
+SERVE_ROUTES = ("lm", "pod", "cascade")
+
+
+# ---------------------------------------------------------------------------
+# Per-request PRNG contract
+# ---------------------------------------------------------------------------
+
+
+def stage_key(key, rid: int, stage_index: int):
+    """The suite-wide per-request PRNG contract: stage randomness is the
+    serve seed folded with ``(rid, stage_index)`` — never with the batch
+    index or pod composition.  Every route (the ``generate`` driver,
+    ``ServeEngine._step_pod``/``_step_lm``, ``CascadePipeline``) derives
+    noise through this fold, which is what makes outputs bit-identical no
+    matter how requests are batched."""
+    import jax
+
+    return jax.random.fold_in(jax.random.fold_in(key, rid), stage_index)
+
+
+def stage_keys(key, rids, stage_index: int):
+    """Stacked ``(B, ...)`` per-request keys for one batched stage dispatch.
+    ``run_stage`` implementations draw per-request noise by ``jax.vmap``-ing
+    over axis 0 (see ``DiffusionWorkload.run_stage``)."""
+    import jax.numpy as jnp
+
+    return jnp.stack([stage_key(key, rid, stage_index) for rid in rids])
+
+
+# ---------------------------------------------------------------------------
 # Uniform request / cost views
 # ---------------------------------------------------------------------------
 
@@ -39,15 +89,27 @@ class GenRequest:
 
     ``tokens`` is always the conditioning text/prompt token ids (1-D);
     modality-specific knobs (decode budget, denoise steps) ride along so a
-    scheduler never needs to know which model family it is batching."""
+    scheduler never needs to know which model family it is batching.
+
+    ``route`` is the *workload* route (``"lm" | "pod"`` — which scheduler
+    family admits the request); the engine may still *serve* it on the
+    ``"cascade"`` route.  See the route-taxonomy note at the top of this
+    module."""
 
     rid: int
     modality: str  # "text" | "image" | "video"
-    route: str  # "lm" | "pod"
+    route: str  # workload route: "lm" | "pod" (see WORKLOAD_ROUTES)
     tokens: Any  # (S,) int32 prompt / text-conditioning ids
     max_new_tokens: int = 0  # LM decode budget
     denoise_steps: int = 0  # iterative-refinement step count (pod route)
     meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.route not in WORKLOAD_ROUTES:
+            raise ValueError(
+                f"unknown workload route {self.route!r} (expected one of "
+                f"{WORKLOAD_ROUTES}; 'cascade' is a serve route — pass it "
+                f"via ServeConfig.route, not on the request)")
 
     @property
     def prompt_len(self) -> int:
@@ -72,11 +134,22 @@ class Stage:
 
 @dataclasses.dataclass(frozen=True)
 class CostDescriptor:
-    """Scheduler-facing cost structure of one workload (paper Table III)."""
+    """Scheduler-facing cost structure of one workload (paper Table III).
+
+    ``route`` is the workload route (``WORKLOAD_ROUTES``); ``stages`` is
+    *executable* — the default ``GenerativeWorkload.generate`` driver and
+    the cascade pipeline both run exactly this sequence through
+    ``run_stage``."""
 
     arch: str
-    route: str  # "lm" | "pod"
+    route: str  # workload route: "lm" | "pod" (see WORKLOAD_ROUTES)
     stages: tuple  # tuple[Stage, ...]
+
+    def __post_init__(self):
+        if self.route not in WORKLOAD_ROUTES:
+            raise ValueError(
+                f"unknown workload route {self.route!r} for {self.arch!r} "
+                f"(expected one of {WORKLOAD_ROUTES})")
 
     def total_steps(self) -> int:
         return sum(s.steps for s in self.stages)
@@ -111,10 +184,14 @@ class GenerativeWorkload:
     modality-specific hooks; everything downstream (``ServeEngine``,
     ``benchmarks.workloads``, the examples) talks only to this interface."""
 
-    route: str = "pod"  # "lm" (bucketed prefill+decode) | "pod" (denoise pod)
+    route: str = "pod"  # workload route (WORKLOAD_ROUTES): "lm" | "pod"
     modality: str = "image"
 
     def __init__(self, cfg):
+        if self.route not in WORKLOAD_ROUTES:
+            raise ValueError(
+                f"{type(self).__name__}.route={self.route!r} is not a "
+                f"workload route (expected one of {WORKLOAD_ROUTES})")
         self.cfg = cfg
         self.model = self.build_model(cfg)
 
@@ -152,20 +229,101 @@ class GenerativeWorkload:
             meta=meta,
         )
 
-    def generate(self, params, tokens, key, *, impl="auto"):
-        """Batched full-pipeline inference: (B, S) tokens -> output."""
-        return self.model.sample(params, tokens, key, impl=impl)
+    def generate(self, params, tokens, key, *, impl="auto",
+                 max_new_tokens: int = 0, temperature: float = 0.0,
+                 rids=None, stage_impl: dict | None = None, on_stage=None):
+        """Batched full-pipeline inference: (B, S) tokens -> stacked output.
 
-    # -- cascade stage protocol ----------------------------------------------
+        This is THE canonical stage composition: ``init_stage_state`` per
+        request, then the descriptor's stage sequence through ``run_stage``
+        (each dispatch wrapped in a driver-emitted ``tracer.scope`` named
+        after the stage), then ``stage_output``.  The serving engine's pod
+        and lm routes and the cascade pipeline all execute this same
+        machinery, so served outputs and ``trace_events`` characterization
+        can never drift — and under the ``stage_key`` PRNG contract the
+        routes are bit-identical.
+
+        ``rids`` are the per-request ids the PRNG contract folds (default
+        ``range(B)``); ``max_new_tokens`` is a scalar decode budget shared
+        by the batch (per-request budgets produce ragged outputs — use
+        :meth:`generate_requests`, which returns a list); ``stage_impl``
+        overrides the kernel tier per stage (exact name or prefix, same
+        semantics as ``ServeConfig.stage_impl``); ``on_stage(name, wall_s,
+        batch)`` is an optional per-dispatch callback the engine uses for
+        per-stage time attribution."""
+        import jax.numpy as jnp
+
+        return jnp.stack(self.generate_requests(
+            params, tokens, key, impl=impl, max_new_tokens=max_new_tokens,
+            temperature=temperature, rids=rids, stage_impl=stage_impl,
+            on_stage=on_stage))
+
+    def generate_requests(self, params, tokens, key, *, impl="auto",
+                          max_new_tokens=0, temperature: float = 0.0,
+                          rids=None, stage_impl: dict | None = None,
+                          on_stage=None) -> list:
+        """The :meth:`generate` driver, returning per-request outputs as a
+        list (what the serving routes consume — per-request outputs may
+        differ in length, so ``max_new_tokens`` may also be a per-request
+        sequence here, e.g. heterogeneous LM decode budgets)."""
+        import time
+
+        from repro.core import tracer
+        from repro.pipeline.stage import split_state, stack_states
+
+        stages, impls = self._stage_plan(impl, stage_impl)
+        B = int(tokens.shape[0])
+        rids = list(range(B)) if rids is None else list(rids)
+        if len(rids) != B:
+            raise ValueError(f"got {len(rids)} rids for batch of {B}")
+        mnt = (list(max_new_tokens) if np.ndim(max_new_tokens)
+               else [int(max_new_tokens)] * B)
+        state = stack_states([
+            self.init_stage_state(tokens[i], max_new_tokens=mnt[i])
+            for i in range(B)
+        ])
+        for idx, stage in enumerate(stages):
+            keys = stage_keys(key, rids, idx)
+            t0 = time.perf_counter()
+            with tracer.scope(stage.name):
+                state = self.run_stage(
+                    params, stage, state, keys,
+                    impl=impls[idx], temperature=temperature)
+            if on_stage is not None:
+                on_stage(stage.name, time.perf_counter() - t0, B)
+        return [self.stage_output(s) for s in split_state(state, B)]
+
+    def _stage_plan(self, impl: str, stage_impl: dict | None):
+        """(stages, effective per-stage tiers) for one driver invocation,
+        memoized per (impl, stage_impl): serving dispatches the driver once
+        per pod/bucket, and rebuilding the cost descriptor (a full UNet
+        topology walk for diffusion) plus re-resolving overrides every
+        dispatch is pure hot-path waste — the inputs are immutable config."""
+        from repro.pipeline.cascade import resolve_stage_impls
+        from repro.pipeline.stage import effective_tier
+
+        cache_key = (impl, tuple(sorted((stage_impl or {}).items())))
+        cached = getattr(self, "_stage_plan_cache", None)
+        if cached is not None and cached[0] == cache_key:
+            return cached[1]
+        stages = self.cost_descriptor().stages
+        impls = [effective_tier(i)
+                 for i in resolve_stage_impls(stages, impl, stage_impl)]
+        plan = (stages, impls)
+        self._stage_plan_cache = (cache_key, plan)
+        return plan
+
+    # -- the stage protocol (the ONLY execution path) ------------------------
     #
     # ``cost_descriptor().stages`` is not just a cost annotation: each Stage
-    # is *executable* through ``run_stage``, which is what the cascade
-    # pipeline (``repro.pipeline``) schedules.  State is a dict pytree of
-    # arrays whose leading axis is the batch; the pipeline stacks/splits the
-    # per-request views on axis 0, so every entry a stage stores must carry
-    # the batch axis first (scalars go in as shape-() arrays, stacked to
-    # (B,)).  Diffusion splits base/SR stages, TTV splits keyframe/temporal
-    # denoise, LM degenerates to prefill+decode — one machinery for all.
+    # is *executable* through ``run_stage``, and the default ``generate``
+    # driver above composes exactly that sequence — there is no model-level
+    # pipeline driver anymore.  State is a dict pytree of arrays whose
+    # leading axis is the batch; the pipeline stacks/splits the per-request
+    # views on axis 0, so every entry a stage stores must carry the batch
+    # axis first (scalars go in as shape-() arrays, stacked to (B,)).
+    # Diffusion splits base/SR stages, TTV splits keyframe/temporal denoise,
+    # LM degenerates to prefill+decode — one machinery for all.
 
     def init_stage_state(self, tokens, *, max_new_tokens: int = 0) -> dict:
         """Per-request state entering the first pipeline stage (unbatched:
@@ -181,13 +339,20 @@ class GenerativeWorkload:
         batched state.  The final stage must store the result under
         ``"out"`` (or override ``stage_output``).
 
-        ``impl`` selects the kernel tier *for this stage* (the cascade
-        pipeline resolves per-stage overrides before calling); ``temperature``
-        is the sampling temperature for token-sampling stages (0 = greedy) —
+        ``key`` is the stacked ``(B, ...)`` per-request key batch from
+        :func:`stage_keys` — one key per request, folded on
+        ``(seed, rid, stage_index)``.  Stages drawing noise must derive it
+        per request (``jax.vmap`` over axis 0), never from the batch as a
+        whole; that is the invariant that makes every serve route
+        bit-identical regardless of batch composition.
+
+        ``impl`` selects the kernel tier *for this stage* (the drivers
+        resolve per-stage overrides before calling); ``temperature`` is the
+        sampling temperature for token-sampling stages (0 = greedy) —
         workloads whose samplers don't take a temperature ignore it."""
         raise NotImplementedError(
-            f"{type(self).__name__} does not implement run_stage for "
-            f"cascade serving (stage {stage.name!r})")
+            f"{type(self).__name__} does not implement run_stage "
+            f"(stage {stage.name!r})")
 
     def stage_group_key(self, stage: Stage, state: dict):
         """Extra batch-compatibility key for ``stage`` over an unbatched

@@ -99,7 +99,6 @@ class DiffusionWorkload(GenerativeWorkload):
     def run_stage(self, params, stage, state, key, *, impl="auto",
                   temperature: float = 0.0):
         import jax
-        import jax.numpy as jnp
 
         del temperature  # DDIM sampling has no temperature knob
         model, cfg = self.model, self.cfg
@@ -108,9 +107,11 @@ class DiffusionWorkload(GenerativeWorkload):
             return {"ctx": ctx}
         if stage.name == "denoise":
             ctx = state["ctx"]
-            B, hw = ctx.shape[0], cfg.latent_size
-            z = jax.random.normal(key, (B, hw, hw, cfg.unet.in_channels),
-                                  cfg.unet.dtype)
+            hw = cfg.latent_size
+            # per-request noise from the (seed, rid, stage) key contract:
+            # batch composition can never change a request's sample
+            z = jax.vmap(lambda k: jax.random.normal(
+                k, (hw, hw, cfg.unet.in_channels), cfg.unet.dtype))(key)
             z = model.denoise_loop(params["unet"], model.unet, z, ctx,
                                    stage.steps, impl=impl)
             if cfg.kind == "latent":
@@ -123,9 +124,8 @@ class DiffusionWorkload(GenerativeWorkload):
             B, H, W, C = img.shape
             up = jax.image.resize(img, (B, s.out_size, s.out_size, C),
                                   "bilinear")
-            noise = jax.random.normal(jax.random.fold_in(key, i),
-                                      (B, s.out_size, s.out_size, 3),
-                                      img.dtype)
+            noise = jax.vmap(lambda k: jax.random.normal(
+                k, (s.out_size, s.out_size, 3), img.dtype))(key)
             img = model.denoise_loop(params[f"sr{i}"], model.sr_unets[i],
                                      noise, ctx, s.steps, cond=up, impl=impl)
             last = i == len(cfg.sr_stages) - 1

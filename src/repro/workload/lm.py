@@ -48,9 +48,11 @@ class LMWorkload(GenerativeWorkload):
         return TRACE_PREFILL
 
     def generate(self, params, tokens, key, *, impl="auto",
-                 max_new_tokens: int = TRACE_DECODE):
-        return self.model.generate(params, tokens, key,
-                                   max_new_tokens=max_new_tokens, impl=impl)
+                 max_new_tokens=TRACE_DECODE, **kw):
+        """The default stage driver with an LM-appropriate decode budget
+        default (the paper's 64-token trace workload)."""
+        return super().generate(params, tokens, key, impl=impl,
+                                max_new_tokens=max_new_tokens, **kw)
 
     def cost_descriptor(self) -> CostDescriptor:
         return CostDescriptor(
@@ -70,21 +72,30 @@ class LMWorkload(GenerativeWorkload):
                 "max_new": jnp.int32(max_new_tokens)}
 
     @staticmethod
-    def _next_token(logits, temperature: float, key):
-        """Next-token rule shared by the lm route and the cascade decode
-        stage: greedy argmax at temperature 0 (bit-identical to the
-        pre-consolidation decode loop), seeded categorical sampling above.
-        ``logits`` is (B, V) — the last-position slice."""
+    def _next_token(logits, temperature: float, keys):
+        """Next-token rule every serve route shares: greedy argmax at
+        temperature 0 (bit-identical to the pre-consolidation decode loop),
+        seeded categorical sampling above.  ``logits`` is (B, V) — the
+        last-position slice; ``keys`` the (B, ...) per-request key batch
+        (the ``stage_key`` contract), so sampled tokens are independent of
+        batch composition too."""
         if temperature <= 0.0:
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            key, logits / temperature).astype(jnp.int32)[:, None]
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg / temperature)
+        )(keys, logits).astype(jnp.int32)[:, None]
+
+    @staticmethod
+    def _fold_step(keys, step: int):
+        """Per-request sub-stream for decode step ``step``."""
+        return jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
                   temperature: float = 0.0):
-        """Prefill/decode as cascade stages — the single decode loop both
-        serving routes share (``ServeEngine._step_lm`` delegates here), so
-        ``ServeConfig.temperature`` sampling lives in exactly one place."""
+        """Prefill/decode stages — the single decode loop every serve route
+        runs (the lm route's ``_step_lm`` drives it through ``generate``),
+        so ``ServeConfig.temperature`` sampling lives in exactly one
+        place."""
         model = self.model
         if stage.name == "prefill":
             toks = state["tokens"]  # (B, S) bucket-padded
@@ -93,7 +104,7 @@ class LMWorkload(GenerativeWorkload):
             logits, caches, _ = model.prefill(params, toks, impl=impl,
                                               max_len=cap)
             nxt = self._next_token(logits[:, -1], temperature,
-                                   jax.random.fold_in(key, 0))
+                                   self._fold_step(key, 0))
             return {
                 "max_new": state["max_new"],
                 "next_tok": nxt,
@@ -117,7 +128,7 @@ class LMWorkload(GenerativeWorkload):
                 out.append(nxt)
                 logits, caches = decode(params, nxt, caches, cur, impl=impl)
                 nxt = self._next_token(logits[:, 0], temperature,
-                                       jax.random.fold_in(key, 1 + step))
+                                       self._fold_step(key, 1 + step))
                 cur = cur + 1
             tokens = (jnp.concatenate(out, axis=1) if out
                       else jnp.zeros((B, 0), jnp.int32))
@@ -149,14 +160,19 @@ class LMWorkload(GenerativeWorkload):
         return (jax.ShapeDtypeStruct((TRACE_BATCH, TRACE_PREFILL), jnp.int32),)
 
     def trace_events(self, impl: str = "auto") -> list:
-        """Prefill once + decode steps at sampled cache lengths, scaled."""
-        model, cfg = self.model, self.cfg
+        """Prefill once + decode steps at sampled cache lengths, scaled.
+        Events are scoped by descriptor stage name (``prefill``/``decode``),
+        matching the per-stage scopes the ``generate`` driver emits."""
+        import dataclasses
+
+        model = self.model
         params = characterize.abstract_params(model)
         S, NEW = TRACE_PREFILL, TRACE_DECODE
         (toks,) = self.trace_inputs()
-        ev = characterize.trace_workload(
-            lambda p, t: model.prefill(p, t, impl=impl, max_len=S + NEW),
-            params, toks)
+        ev = [dataclasses.replace(e, name=f"prefill/{e.name}")
+              for e in characterize.trace_workload(
+                  lambda p, t: model.prefill(p, t, impl=impl, max_len=S + NEW),
+                  params, toks)]
         sample_points = 4
         for i in range(sample_points):
             cur = S + i * (NEW // sample_points)
@@ -167,5 +183,7 @@ class LMWorkload(GenerativeWorkload):
                 lambda p, t, c: model.decode_step(p, t, c, jnp.int32(cur),
                                                   impl=impl),
                 params, tok1, caches)
+            step_ev = [dataclasses.replace(e, name=f"decode/{e.name}")
+                       for e in step_ev]
             ev += tracer.scale_events(step_ev, NEW // sample_points)
         return ev

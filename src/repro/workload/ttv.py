@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import tracer
 from repro.models.ttv import (
     MakeAVideoPipeline,
     PhenakiConfig,
@@ -91,19 +90,23 @@ class MakeAVideoWorkload(GenerativeWorkload):
         del temperature  # DDIM sampling has no temperature knob
 
         model, cfg = self.model, self.cfg
+
+        def initial_noise(keys):
+            hw = cfg.image_size // cfg.latent_down
+            return jax.vmap(lambda k: jax.random.normal(
+                k, (cfg.frames, hw, hw, cfg.unet.in_channels),
+                cfg.dtype))(keys)
+
         if stage.name == "text_encoder":
-            with tracer.scope("text_encoder"):
-                ctx = model.text_encoder(params["text"], state["tokens"],
-                                         impl=impl)
+            ctx = model.text_encoder(params["text"], state["tokens"],
+                                     impl=impl)
             return {"ctx": ctx}
 
         kf, tp = self._denoise_split()
         total = kf + tp
         ctx = state["ctx"]
         if stage.name == "keyframe_denoise":
-            B, hw = ctx.shape[0], cfg.image_size // cfg.latent_down
-            z = jax.random.normal(
-                key, (B, cfg.frames, hw, hw, cfg.unet.in_channels), cfg.dtype)
+            z = initial_noise(key)
 
             def spatial_eps(z, t):
                 # frames folded into batch; temporal layers inactive
@@ -114,25 +117,20 @@ class MakeAVideoWorkload(GenerativeWorkload):
                     jnp.repeat(ctx, F, axis=0), impl=impl)
                 return eps.reshape(Bz, F, H, W, C)
 
-            with tracer.scope("keyframe_denoise"):
-                z = ddim_range(spatial_eps, z, total, 0, kf)
+            z = ddim_range(spatial_eps, z, total, 0, kf)
             return {"ctx": ctx, "z": z}
         if stage.name == "temporal_denoise":
             if kf:
                 z = state["z"]
             else:  # unfactorized 1-step schedule: no keyframe stage ran
-                B, hw = ctx.shape[0], cfg.image_size // cfg.latent_down
-                z = jax.random.normal(
-                    key, (B, cfg.frames, hw, hw, cfg.unet.in_channels),
-                    cfg.dtype)
+                z = initial_noise(key)
 
             def video_eps(z, t):
                 return model.video_unet(
                     params["vunet"], z,
                     jnp.full((z.shape[0],), t, jnp.float32), ctx, impl=impl)
 
-            with tracer.scope("temporal_denoise"):
-                out = ddim_range(video_eps, z, total, kf, total)
+            out = ddim_range(video_eps, z, total, kf, total)
             return {"out": out}
         raise ValueError(f"unknown TTV stage {stage.name!r}")
 
@@ -166,15 +164,14 @@ class PhenakiWorkload(GenerativeWorkload):
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
                   temperature: float = 0.0):
-        del temperature  # Phenaki's masked parallel decode is confidence-based
+        del key, temperature  # confidence-based unmasking: deterministic
         model = self.model
         if stage.name == "text_encoder":
-            with tracer.scope("text_encoder"):
-                ctx = model.text_encoder(params["text"], state["tokens"],
-                                         impl=impl)
-                ctx = model._ctx_proj()(params["ctx_proj"], ctx)
+            ctx = model.text_encoder(params["text"], state["tokens"],
+                                     impl=impl)
+            ctx = model._ctx_proj()(params["ctx_proj"], ctx)
             return {"ctx": ctx}
         if stage.name == "parallel_decode":
-            return {"out": model.decode_tokens(params, state["ctx"], key,
+            return {"out": model.decode_tokens(params, state["ctx"],
                                                impl=impl)}
         raise ValueError(f"unknown Phenaki stage {stage.name!r}")

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
-from repro.configs.suite import build_suite_model, with_dtype
+from repro.configs.suite import with_dtype
 from repro.core import (
     amdahl,
     analytical,
@@ -15,19 +15,16 @@ from repro.core import (
     prefill_decode,
     seq_profile,
 )
+from repro.workload import workload_for
 
 
 @pytest.fixture(scope="module")
 def sd_events():
-    cfg = with_dtype(get_config("stable-diffusion"), jnp.bfloat16)
-    m = build_suite_model(cfg)
-    params = characterize.abstract_params(m)
-    tokens = jax.ShapeDtypeStruct((1, 77), jnp.int32)
-    key = jax.random.PRNGKey(0)
-    base = characterize.trace_workload(
-        lambda p, t: m.sample(p, t, key, impl="naive"), params, tokens)
-    flash = characterize.trace_workload(
-        lambda p, t: m.sample(p, t, key, impl="blocked_jax"), params, tokens)
+    # traced through the canonical generate() stage driver — the same path
+    # served execution runs, so characterization can never drift from it
+    wl = workload_for(with_dtype(get_config("stable-diffusion"), jnp.bfloat16))
+    base = characterize.trace_generative(wl, impl="naive")
+    flash = characterize.trace_generative(wl, impl="blocked_jax")
     return base, flash
 
 
@@ -71,7 +68,7 @@ def test_c5_memory_scaling_exponent_is_4():
 
 def test_analytic_profile_matches_traced(sd_events):
     base, _ = sd_events
-    unet_events = [e for e in base if e.name.startswith("unet")]
+    unet_events = [e for e in base if e.name.startswith("denoise")]
     traced = seq_profile.self_attention_profile(unet_events)
     cfg = get_config("stable-diffusion")
     pred = analytical.unet_seq_profile(
@@ -84,16 +81,12 @@ def test_analytic_profile_matches_traced(sd_events):
 @pytest.mark.slow  # abstract-traces the full-size 3B Muse
 def test_muse_parallel_decode_constant_seq():
     cfg = with_dtype(get_config("muse"), jnp.bfloat16)
-    m = build_suite_model(cfg)
-    params = characterize.abstract_params(m)
-    tokens = jax.ShapeDtypeStruct((1, 77), jnp.int32)
-    key = jax.random.PRNGKey(0)
-    ev = characterize.trace_workload(
-        lambda p, t: m.sample(p, t, key, impl="blocked_jax", decode_pixels=False),
-        params, tokens)
-    prof = seq_profile.self_attention_profile(ev)
-    image_seqs = {s for s in prof.seq_lens if s == cfg.image_tokens}
-    assert image_seqs == {cfg.image_tokens}  # flat profile (paper Fig. 7)
+    ev = characterize.trace_generative(workload_for(cfg), impl="blocked_jax")
+    decode_ev = [e for e in ev if e.name.startswith("parallel_decode")]
+    prof = seq_profile.self_attention_profile(decode_ev)
+    # flat profile (paper Fig. 7): every decode-stage self-attention call
+    # runs the full constant image-token sequence
+    assert set(prof.seq_lens) == {cfg.image_tokens}
 
 
 def test_tracer_scaling_by_denoise_steps(sd_events):

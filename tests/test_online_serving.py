@@ -266,10 +266,21 @@ def test_stage_impl_override_reaches_run_stage_on_every_stage():
     assert eng.stats["stage_impl"] == stage_impl
 
 
-def test_stage_impl_rejected_off_cascade_route():
-    wl = reduced_workload(get_config("olmo-1b"))
-    with pytest.raises(ValueError, match="cascade-route"):
-        ServeEngine(wl, {}, ServeConfig(stage_impl={"decode": "naive"}))
+def test_stage_impl_typo_rejected_on_every_route():
+    """All routes now execute the stage driver, so stage_impl applies (and
+    is typo-validated at engine construction) everywhere — a key matching
+    no descriptor stage must raise, not silently serve the default tier."""
+    for wl in (reduced_workload(get_config("olmo-1b")),
+               workload_for(TINY_TTI_CASCADE)):
+        for route in ("auto", "cascade"):
+            with pytest.raises(ValueError, match="match no stage"):
+                ServeEngine(wl, {}, ServeConfig(
+                    route=route, stage_impl={"not_a_stage": "naive"}))
+        # a valid per-stage override is accepted off the cascade route too
+        # (the pod/lm routes run the same driver; spy coverage in
+        # tests/test_route_parity.py)
+        first = wl.cost_descriptor().stages[0].name
+        ServeEngine(wl, {}, ServeConfig(stage_impl={first: "naive"}))
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +388,75 @@ def test_early_flushed_pod_keeps_membership_and_profile_size():
     # aligned baseline counts each flushed request exactly once per tick
     assert prof["aligned_peak"] == max(demands) * 2
     assert prof["peak_reduction"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Tick -> wall-clock calibration (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+
+def test_clock_calibration_configured_and_measured():
+    """ServeConfig.tick_seconds maps tick latencies to seconds; None
+    auto-calibrates from measured busy-tick service time.  Both surface in
+    stats["clock"] with req/s + wall-clock tails alongside the tick ones."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+
+    eng = _cascade_engine(wl, params, tick_seconds=0.25)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(rid, rng.integers(0, wl.prompt_vocab, size=6))
+    eng.run()
+    s = eng.stats
+    assert s["clock"] == {"tick_seconds": 0.25, "source": "configured",
+                          "ticks": eng._tick,
+                          "busy_ticks": s["clock"]["busy_ticks"]}
+    assert s["clock"]["busy_ticks"] >= 1
+    # wall-clock latencies are exactly the tick latencies times the clock
+    for k, v in s["request_latency_ticks"].items():
+        assert s["request_latency_s"][k] == pytest.approx(v * 0.25)
+    assert s["requests_per_s"] == pytest.approx(3 / (eng._tick * 0.25))
+
+    eng2 = _cascade_engine(wl, params)  # auto-calibrated
+    for rid in range(3):
+        eng2.submit(rid, rng.integers(0, wl.prompt_vocab, size=6))
+    eng2.run()
+    c2 = eng2.stats["clock"]
+    assert c2["source"] == "calibrated" and c2["tick_seconds"] > 0.0
+    assert eng2.tick_seconds() == c2["tick_seconds"]
+    assert eng2.stats["requests_per_s"] > 0.0
+
+
+def test_clock_report_present_on_lm_and_pod_routes():
+    for wl in (reduced_workload(get_config("olmo-1b")),
+               workload_for(TINY_TTI_CASCADE)):
+        eng = ServeEngine(wl, wl.init(jax.random.PRNGKey(0)),
+                          ServeConfig(max_batch=2, buckets=(8,)))
+        eng.submit(0, np.arange(6) % wl.prompt_vocab, max_new_tokens=2)
+        eng.run()
+        s = eng.stats
+        assert s["clock"]["source"] == "calibrated"
+        assert s["clock"]["tick_seconds"] > 0.0
+        assert s["request_latency_s"]["p95"] >= 0.0
+        assert s["requests_per_s"] > 0.0
+
+
+def test_arrival_trace_rates_stated_in_requests_per_second():
+    """ArrivalTrace.from_rps converts req/s onto the tick clock: halving
+    tick_seconds (a faster host) spreads the same req/s over more ticks."""
+    slow = ArrivalTrace.from_rps("poisson", rps=4.0, tick_seconds=0.5, seed=0)
+    fast = ArrivalTrace.from_rps("poisson", rps=4.0, tick_seconds=0.25, seed=0)
+    assert slow.rate == pytest.approx(2.0) and fast.rate == pytest.approx(1.0)
+    assert max(fast.ticks(32)) > max(slow.ticks(32))
+    burst = ArrivalTrace.from_rps("burst", rps=2.0, tick_seconds=0.5,
+                                  burst_size=4)
+    assert burst.burst_gap == 4  # 4 reqs per front / (2 req/s * 0.5 s/tick)
+    with pytest.raises(ValueError, match="tick_seconds"):
+        ArrivalTrace.from_rps("poisson", rps=1.0, tick_seconds=0.0)
+    with pytest.raises(ValueError, match="rps"):
+        ArrivalTrace.from_rps("poisson", rps=-1.0, tick_seconds=0.5)
+    with pytest.raises(ValueError, match="no arrival rate"):
+        ArrivalTrace.from_rps("closed-loop", rps=1.0, tick_seconds=0.5)
 
 
 def test_percentiles_helper_empty_and_basic():

@@ -1,24 +1,28 @@
-"""Paper-suite model smoke tests: reduced configs sample + train on CPU."""
+"""Paper-suite model smoke tests: reduced configs generate + train on CPU
+(inference through the canonical ``workload.generate`` stage driver — the
+models expose no pipeline drivers of their own)."""
 
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
-from repro.configs.suite import SUITE, build_suite_model, reduced_suite_config
+from repro.configs.suite import SUITE, reduced_suite_config
+from repro.workload import workload_for
 
 pytestmark = pytest.mark.slow  # sample+train+grad per suite model (minutes)
 
 
 @pytest.mark.parametrize("name", [n for n in SUITE if n != "llama2-7b"])
-def test_suite_sample_and_train(name, rng_key):
+def test_suite_generate_and_train(name, rng_key):
     cfg = get_config(name)
     rcfg = reduced_suite_config(cfg)
-    m = build_suite_model(rcfg)
-    p = m.init(rng_key)
+    wl = workload_for(rcfg)
+    m = wl.model
+    p = wl.init(rng_key)
     txt = jax.random.randint(rng_key, (1, 8), 0, 100)
 
-    out = m.sample(p, txt, rng_key)
+    out = wl.generate(p, txt, rng_key)
     assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
 
     if name in ("imagen", "stable-diffusion", "prod-image"):
@@ -46,9 +50,9 @@ def test_suite_sample_and_train(name, rng_key):
 def test_diffusion_sr_cascade_shapes(rng_key):
     """Imagen pixel cascade upsamples through its SR stages."""
     cfg = reduced_suite_config(get_config("imagen"))
-    m = build_suite_model(cfg)
-    p = m.init(rng_key)
+    wl = workload_for(cfg)
+    p = wl.init(rng_key)
     txt = jax.random.randint(rng_key, (1, 8), 0, 100)
-    out = m.sample(p, txt, rng_key)
+    out = wl.generate(p, txt, rng_key)
     assert out.shape[1] == cfg.sr_stages[-1].out_size
     assert out.shape[-1] == 3

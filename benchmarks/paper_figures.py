@@ -531,6 +531,127 @@ def bench_route_parity() -> list:
 bench_route_parity.bench_group = "serving"
 
 
+def bench_fleet() -> list:
+    """Fleet serving A/Bs (``repro.fleet``, docs/fleet.md), recorded into
+    ``BENCH_serving.json``.
+
+    (1) **SLO-aware vs FIFO** on a mixed TTV+TTI trace: a front of
+    batch-tier TTV jobs occupies the fleet at tick 0, then interactive TTI
+    requests land mid-flight on a burst trace with a tight deadline.  The
+    FIFO single-replica baseline serves run-to-completion, so interactive
+    work queues behind the TTV front and misses its deadline; the SLO fleet
+    (2 replicas, tier-aware placement, stage-boundary preemption +
+    migration) parks the batch work and serves interactive first.  Rows
+    record per-tier deadline attainment, latency p50/p95 ticks, preemption/
+    migration counts and per-replica utilization.
+
+    (2) **Autoscale vs fixed fleet** on a diurnal (sinusoid-modulated
+    poisson) trace: same attainment, but the autoscaled fleet pays fewer
+    replica-ticks (the capacity-cost axis) by tracking the load swing."""
+    from repro.configs.tiny import TINY_TTI_CASCADE, TINY_TTV_CASCADE
+    from repro.fleet import AutoscalePolicy, FleetRouter
+    from repro.serving import ArrivalTrace
+    from repro.serving.engine import ServeConfig
+    from repro.workload import workload_for
+
+    tti = workload_for(TINY_TTI_CASCADE)
+    ttv = workload_for(TINY_TTV_CASCADE)
+    pools = {"tti": (tti, tti.init(jax.random.PRNGKey(0))),
+             "ttv": (ttv, ttv.init(jax.random.PRNGKey(0)))}
+    cfg = ServeConfig(max_batch=2, pod_size=2, queue_capacity=4, seed=0)
+    n_batch, n_inter, deadline = 8, 6, 4
+    rows, ab = [], {}
+
+    def mixed_fleet(n_replicas, policy, preempt):
+        fleet = FleetRouter(pools, cfg, n_replicas=n_replicas,
+                            policy=policy, preempt=preempt)
+        rng = np.random.default_rng(0)
+        for i in range(n_batch):  # batch TTV front occupies the fleet
+            fleet.submit("ttv", 100 + i,
+                         rng.integers(0, ttv.prompt_vocab, 8),
+                         arrival_tick=0, slo_tier="batch")
+        burst = ArrivalTrace("burst", burst_size=2, burst_gap=2, seed=0)
+        for i, tick in enumerate(burst.ticks(n_inter)):  # lands mid-flight
+            fleet.submit("tti", i, rng.integers(0, tti.prompt_vocab, 8),
+                         arrival_tick=2 + tick, slo_tier="interactive",
+                         deadline_ticks=deadline)
+        t0 = time.perf_counter()
+        n = len(fleet.run())
+        return fleet.summary(), (time.perf_counter() - t0) / n * 1e6
+
+    for label, kw in (
+            ("fifo_1replica",
+             dict(n_replicas=1, policy="round-robin", preempt=False)),
+            ("slo_preempt_2replica",
+             dict(n_replicas=2, policy="slo", preempt=True))):
+        s, us = mixed_fleet(**kw)
+        it, bt = s["tiers"]["interactive"], s["tiers"]["batch"]
+        ab[label] = it
+        util = ",".join(f"{u:.2f}" for u in s["replicas"]["utilization"])
+        rows.append((
+            f"fleet/mixed_tti_ttv/{label}", us,
+            f"interactive_attainment={it['deadline_attainment']:.3f};"
+            f"interactive_p50={it['latency_ticks']['p50']:.1f}ticks;"
+            f"interactive_p95={it['latency_ticks']['p95']:.1f}ticks;"
+            f"batch_p95={bt['latency_ticks']['p95']:.1f}ticks;"
+            f"preempted_ticks={s['preempted_ticks']};"
+            f"preemptions={s['preemptions']};parked={s['parked']};"
+            f"migrations={s['migrations']};replica_util={util};"
+            f"ticks={s['ticks']}",
+        ))
+    fifo, slo = ab["fifo_1replica"], ab["slo_preempt_2replica"]
+    rows.append((
+        "fleet/mixed_tti_ttv/slo_vs_fifo", 0.0,
+        f"attainment_fifo={fifo['deadline_attainment']:.3f};"
+        f"attainment_slo={slo['deadline_attainment']:.3f};"
+        f"interactive_p95_fifo={fifo['latency_ticks']['p95']:.1f}ticks;"
+        f"interactive_p95_slo={slo['latency_ticks']['p95']:.1f}ticks;"
+        f"deadline={deadline}ticks",
+    ))
+
+    # (2) autoscale vs fixed fleet on the diurnal swing
+    def diurnal_fleet(n_replicas, autoscale):
+        fleet = FleetRouter({"tti": pools["tti"]}, cfg,
+                            n_replicas=n_replicas, policy="least-queue",
+                            autoscale=autoscale)
+        fleet.submit_trace(
+            "tti", ArrivalTrace("diurnal", rate=0.8, period=12,
+                                amplitude=0.9, seed=1),
+            10, deadline_ticks=12)
+        fleet.run()
+        return fleet.summary()
+
+    cost = {}
+    for label, kw in (
+            ("fixed_3replica", dict(n_replicas=3, autoscale=None)),
+            ("autoscale_1to3",
+             dict(n_replicas=3,
+                  autoscale=AutoscalePolicy(min_replicas=1, max_replicas=3,
+                                            target_queue=3.0, cooldown=2)))):
+        s = diurnal_fleet(**kw)
+        it = s["tiers"]["interactive"]
+        cost[label] = s["replicas"]
+        rows.append((
+            f"fleet/diurnal_autoscale/{label}", 0.0,
+            f"attainment={it['deadline_attainment']:.3f};"
+            f"p95={it['latency_ticks']['p95']:.1f}ticks;"
+            f"replica_ticks={s['replicas']['replica_ticks']};"
+            f"mean_active={s['replicas']['mean_active']:.2f};"
+            f"scale_events={len((s['autoscale'] or {}).get('scale_events', []))}",
+        ))
+    rows.append((
+        "fleet/diurnal_autoscale/cost_ratio", 0.0,
+        f"replica_ticks_fixed={cost['fixed_3replica']['replica_ticks']};"
+        f"replica_ticks_autoscale={cost['autoscale_1to3']['replica_ticks']};"
+        f"savings="
+        f"{1 - cost['autoscale_1to3']['replica_ticks'] / max(cost['fixed_3replica']['replica_ticks'], 1):.1%}",
+    ))
+    return rows
+
+
+bench_fleet.bench_group = "serving"
+
+
 ALL_BENCHES = [
     bench_roofline_suite,
     bench_operator_breakdown,
@@ -545,4 +666,5 @@ ALL_BENCHES = [
     bench_cascade,
     bench_online,
     bench_route_parity,
+    bench_fleet,
 ]

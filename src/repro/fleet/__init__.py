@@ -1,0 +1,31 @@
+"""Fleet serving: SLO-classed routing over N engine replicas.
+
+The deployment layer above ``repro.serving``: a :class:`FleetRouter` drives
+N :class:`FleetReplica` instances (each hosting per-pool cascade-route
+``ServeEngine``s) on one shared tick clock, places SLO-classed requests via
+pluggable policies, preempts batch-tier work at cascade stage boundaries
+(migrating it bit-identically between same-seed replicas), and A/Bs an
+:class:`AutoscalePolicy` against a fixed fleet.  See ``docs/fleet.md``.
+"""
+
+from repro.fleet.autoscale import AutoscalePolicy
+from repro.fleet.replica import (
+    ENGINE_POLICIES,
+    FleetReplica,
+    RequestMeta,
+)
+from repro.fleet.router import (
+    CROSS_TIER_WEIGHT,
+    PLACEMENT_POLICIES,
+    FleetRouter,
+)
+
+__all__ = [
+    "AutoscalePolicy",
+    "CROSS_TIER_WEIGHT",
+    "ENGINE_POLICIES",
+    "FleetReplica",
+    "FleetRouter",
+    "PLACEMENT_POLICIES",
+    "RequestMeta",
+]

@@ -26,6 +26,7 @@ import numpy as np
 
 import repro.configs.suite  # noqa: F401 — registers the paper suite
 from repro.configs import get_config, list_configs
+from repro.fleet import PLACEMENT_POLICIES, AutoscalePolicy, FleetRouter
 from repro.serving import PATTERNS, ArrivalTrace
 from repro.serving.engine import ServeConfig, ServeEngine
 from repro.workload import reduced_workload, workload_for
@@ -43,6 +44,68 @@ def parse_stage_impl(spec: str | None) -> dict | None:
         name, tier = part.split("=", 1)
         out[name.strip()] = tier.strip()
     return out
+
+
+def parse_autoscale(spec: str | None) -> AutoscalePolicy | None:
+    """``"1:3"`` -> AutoscalePolicy(min_replicas=1, max_replicas=3)."""
+    if not spec:
+        return None
+    try:
+        lo, hi = (int(x) for x in spec.split(":", 1))
+        return AutoscalePolicy(min_replicas=lo, max_replicas=hi)
+    except ValueError as e:
+        raise SystemExit(f"--autoscale expects MIN:MAX replicas: {e}")
+
+
+def run_fleet(args, workload, params, serve_cfg, arrivals) -> None:
+    """Fleet serving path (--replicas/--router/--autoscale): one pool of
+    the chosen arch behind a FleetRouter, with a seeded --slo-mix tier
+    assignment and per-tier deadline-attainment reporting."""
+    policy = args.router or "round-robin"
+    autoscale = parse_autoscale(args.autoscale)
+    fleet = FleetRouter({args.arch: (workload, params)}, serve_cfg,
+                        n_replicas=args.replicas, policy=policy,
+                        preempt=args.preempt, autoscale=autoscale)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        tick = arrivals[rid]
+        if tick is None:
+            raise SystemExit("fleet serving needs timed arrivals "
+                             "(closed-loop is a single-engine mode)")
+        plen = int(rng.integers(4, min(workload.max_prompt_len, 30) + 1))
+        prompt = rng.integers(0, workload.prompt_vocab, size=plen)
+        interactive = bool(rng.random() < args.slo_mix)
+        fleet.submit(args.arch, rid, prompt, arrival_tick=tick,
+                     max_new_tokens=args.max_new,
+                     slo_tier="interactive" if interactive else "batch",
+                     deadline_ticks=(args.deadline_ticks if interactive
+                                     else None))
+    t0 = time.perf_counter()
+    results = fleet.run()
+    dt = time.perf_counter() - t0
+    s = fleet.summary()
+    scale = (f" | autoscale {autoscale.min_replicas}:{autoscale.max_replicas}"
+             if autoscale else "")
+    print(f"fleet [{policy}{', preempt' if args.preempt else ''}{scale}]: "
+          f"served {len(results)} requests in {dt:.2f}s over "
+          f"{s['replicas']['configured']} replicas, {s['ticks']} ticks")
+    for tier, t in s["tiers"].items():
+        lat = t["latency_ticks"]
+        print(f"  tier {tier}: {t['requests']} reqs | latency ticks p50 "
+              f"{lat['p50']:.0f} p95 {lat['p95']:.0f} | deadline attainment "
+              f"{t['deadline_attainment']:.0%} "
+              f"({t['deadline_misses']} misses / {t['deadline_requests']} "
+              f"deadlined)")
+    print(f"  preemption: {s['preempted_ticks']} preempted ticks, "
+          f"{s['preemptions']} events, {s['parked']} parked / "
+          f"{s['resumed']} resumed, {s['migrations']} migrations")
+    util = ", ".join(f"r{i}={u:.0%}"
+                     for i, u in enumerate(s["replicas"]["utilization"]))
+    print(f"  replicas: {util} | mean active "
+          f"{s['replicas']['mean_active']:.2f} | replica-ticks "
+          f"{s['replicas']['replica_ticks']}")
+    if s["autoscale"] is not None:
+        print(f"  autoscale events: {s['autoscale']['scale_events']}")
 
 
 def main():
@@ -82,23 +145,46 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="LM sampling temperature (0 = greedy)")
     ap.add_argument("--seed", type=int, default=0)
+    # -- fleet serving (docs/fleet.md) ----------------------------------------
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode: serve across N engine replicas "
+                         "(cascade route forced; see docs/fleet.md)")
+    ap.add_argument("--router", default=None, choices=PLACEMENT_POLICIES,
+                    help="fleet placement policy (implies fleet mode)")
+    ap.add_argument("--slo-mix", type=float, default=0.5,
+                    help="fleet: fraction of requests in the interactive "
+                         "SLO tier (seeded per-request assignment; the rest "
+                         "are batch tier)")
+    ap.add_argument("--deadline-ticks", type=int, default=25,
+                    help="fleet: e2e deadline for interactive-tier requests, "
+                         "in fleet ticks (batch tier is best-effort)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="fleet: migrate batch-tier work parked at stage "
+                         "boundaries off replicas with interactive backlog "
+                         "(requires --router slo)")
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                    help="fleet: queue-depth autoscaling between MIN and MAX "
+                         "active replicas (overrides --replicas)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     workload = (reduced_workload(cfg) if args.reduced else workload_for(cfg))
     cfg = workload.cfg
     params = workload.init(jax.random.PRNGKey(0))
+    fleet_mode = (args.replicas > 1 or args.router is not None
+                  or args.autoscale is not None or args.preempt)
 
-    engine = ServeEngine(workload, params,
-                         ServeConfig(pod_size=args.pod_size,
-                                     route=args.route, impl=args.impl,
-                                     stage_impl=parse_stage_impl(args.stage_impl),
-                                     admission=args.admission,
-                                     temperature=args.temperature,
-                                     tick_seconds=args.tick_seconds,
-                                     seed=args.seed))
+    serve_cfg = ServeConfig(pod_size=args.pod_size,
+                            route=args.route, impl=args.impl,
+                            stage_impl=parse_stage_impl(args.stage_impl),
+                            admission=args.admission,
+                            temperature=args.temperature,
+                            tick_seconds=args.tick_seconds,
+                            seed=args.seed)
+    engine = None if fleet_mode else ServeEngine(workload, params, serve_cfg)
     cd = workload.cost_descriptor()
-    print(f"arch {cfg.name} | route {engine.route} | stages "
+    route = "cascade" if fleet_mode else engine.route
+    print(f"arch {cfg.name} | route {route} | stages "
           + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
 
     if args.arrival_rps is not None:
@@ -121,6 +207,10 @@ def main():
         print(f"arrivals {args.arrivals}: ticks "
               f"{[t if t is not None else 'on-completion' for t in arrivals]}"
               f" | admission {args.admission}")
+
+    if fleet_mode:
+        run_fleet(args, workload, params, serve_cfg, arrivals)
+        return
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()

@@ -12,6 +12,7 @@ from repro.pipeline.cascade import (
     stage_batch_sizes,
 )
 from repro.pipeline.stage import (
+    ParkedTask,
     StageBuffer,
     StageExecutor,
     StageTask,
@@ -28,6 +29,7 @@ from repro.pipeline.stage import (
 __all__ = [
     "CascadePipeline",
     "DISPATCH_OVERHEAD_FRAC",
+    "ParkedTask",
     "StageBuffer",
     "StageExecutor",
     "StageTask",

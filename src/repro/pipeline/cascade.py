@@ -28,6 +28,7 @@ import jax
 
 from repro.core import tracer
 from repro.pipeline.stage import (
+    ParkedTask,
     StageBuffer,
     StageExecutor,
     StageTask,
@@ -130,6 +131,8 @@ class CascadePipeline:
         self._key = jax.random.PRNGKey(seed)
         self.submitted = 0
         self.completed = 0
+        self.parked = 0  # tasks preempted out at a stage boundary
+        self.resumed = 0  # parked tasks injected back (possibly from elsewhere)
         self.ticks = 0
         self.concurrency: list[int] = []  # stages executed per tick
         self.executed: list[tuple[int, int]] = []  # (stage index, batch size)
@@ -152,6 +155,44 @@ class CascadePipeline:
 
     def pending(self) -> int:
         return sum(len(b) for b in self.buffers)
+
+    # -- stage-boundary preemption (fleet serving) ---------------------------
+
+    def queued_rids(self) -> list[int]:
+        """Rids with state parked in a stage buffer right now — i.e. at a
+        stage boundary, preemptible by :meth:`park`.  (The pipeline never
+        holds state anywhere else between ``tick()`` calls.)"""
+        return [t.rid for b in self.buffers for t in b.tasks()]
+
+    def park(self, rids) -> list[ParkedTask]:
+        """Preempt ``rids`` at their current stage boundary: remove their
+        per-stage state from the buffers and return it as
+        :class:`ParkedTask` payloads.  Because ``tick()`` only advances
+        whole stage dispatches, every queued task is between stages —
+        parking never splits a dispatch, and under the
+        ``stage_key(seed, rid, stage_index)`` fold the resumed request
+        draws bit-identical noise no matter which pipeline (this one or
+        another same-seed replica's) it resumes into."""
+        wanted = set(rids)
+        out: list[ParkedTask] = []
+        for idx, buf in enumerate(self.buffers):
+            out += [ParkedTask(rid=t.rid, stage_index=idx, state=t.state)
+                    for t in buf.drain(wanted)]
+        self.parked += len(out)
+        return out
+
+    def resume(self, parked: list[ParkedTask]) -> None:
+        """Re-inject parked state at its recorded stage boundary.  The push
+        is forced past the buffer bound — capacity is a scheduling signal
+        and migrated state must land; the buffer's backpressure still
+        throttles upstream *dispatches*.  ``completed`` may end up above
+        ``submitted`` on a pipeline that absorbs migrations (the fleet's
+        ledger, not the per-replica counters, is authoritative)."""
+        for p in parked:
+            self.buffers[p.stage_index].push(
+                self._task(p.rid, p.state, p.stage_index),
+                now=self.ticks, force=True)
+        self.resumed += len(parked)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -292,6 +333,8 @@ class CascadePipeline:
             "tiers": tiers,
             "submitted": self.submitted,
             "completed": self.completed,
+            "parked": self.parked,
+            "resumed": self.resumed,
             "ticks": self.ticks,
             "concurrency": {
                 "max": max(conc) if conc else 0,

@@ -12,6 +12,7 @@ never popping more work than the downstream buffer has room for.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Any
@@ -78,6 +79,23 @@ class StageTask:
     enqueued: int = 0  # pipeline tick when pushed into the current buffer
 
 
+@dataclasses.dataclass
+class ParkedTask:
+    """A request's per-stage state lifted out of a :class:`StageBuffer` at a
+    stage boundary — the preemption/migration payload of fleet serving.
+
+    Because the pipeline only advances whole stage dispatches, every queued
+    task *is* at a stage boundary; parking never splits a dispatch.  Under
+    the suite-wide ``stage_key(seed, rid, stage_index)`` PRNG contract a
+    parked request resumed into any pipeline with the same seed — this one
+    or another replica's — draws bit-identical noise from ``stage_index``
+    onward (pinned by ``tests/test_route_parity.py``)."""
+
+    rid: int
+    stage_index: int  # descriptor stage the state is waiting to enter
+    state: dict  # the unbatched per-request stage state
+
+
 # ---------------------------------------------------------------------------
 # Bounded handoff buffer
 # ---------------------------------------------------------------------------
@@ -108,16 +126,30 @@ class StageBuffer:
     def __len__(self) -> int:
         return len(self._q)
 
-    def room(self) -> int:
-        """Free slots (a large finite number when unbounded)."""
+    def free_slots(self) -> int | None:
+        """Real free capacity: ``None`` when unbounded.  A load signal
+        (e.g. the fleet router's queue-depth score) must be able to skip
+        unbounded buffers — a fake "large finite number" here would
+        spuriously saturate any sum over it."""
         if self.capacity is None:
-            return 1 << 30
+            return None
         return max(0, self.capacity - len(self._q))
 
-    def push(self, task: StageTask, now: int = 0) -> bool:
+    def room(self) -> float:
+        """Free slots as a backpressure bound (``math.inf`` when unbounded
+        — safe under ``min``/comparison, never summed into a load score;
+        use :meth:`free_slots` for capacity reporting)."""
+        fs = self.free_slots()
+        return math.inf if fs is None else fs
+
+    def push(self, task: StageTask, now: int = 0, *,
+             force: bool = False) -> bool:
         """Append ``task`` stamped with arrival tick ``now``; False when the
-        buffer is full (the producer must retry next tick — backpressure)."""
-        if self.room() <= 0:
+        buffer is full (the producer must retry next tick — backpressure).
+        ``force=True`` bypasses the bound — the capacity is a scheduling
+        signal, and a migrated request's parked state must land somewhere
+        (:meth:`CascadePipeline.resume`)."""
+        if not force and self.room() <= 0:
             return False
         task.enqueued = now
         self._q.append(task)
@@ -140,6 +172,23 @@ class StageBuffer:
                 rest.append(t)
         self._q = rest
         self.waits += [now - t.enqueued for t in taken]
+        return taken
+
+    def tasks(self) -> tuple[StageTask, ...]:
+        """Snapshot of the queued tasks (FIFO order), for load inspection."""
+        return tuple(self._q)
+
+    def drain(self, rids: set) -> list[StageTask]:
+        """Remove and return every queued task whose rid is in ``rids``
+        (FIFO order preserved for the rest) — the stage-boundary preemption
+        primitive.  Drained tasks record no queue-wait sample; their wait
+        continues in whichever buffer they resume into."""
+        taken: list[StageTask] = []
+        kept: deque[StageTask] = deque()
+        while self._q:
+            t = self._q.popleft()
+            (taken if t.rid in rids else kept).append(t)
+        self._q = kept
         return taken
 
     def sample_occupancy(self) -> None:

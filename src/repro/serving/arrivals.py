@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-PATTERNS = ("poisson", "burst", "closed-loop")
+PATTERNS = ("poisson", "burst", "closed-loop", "diurnal")
 
 #: Sentinel arrival tick for closed-loop requests: the engine admits the
 #: request when an earlier one completes (fixed in-flight concurrency)
@@ -50,6 +50,12 @@ class ArrivalTrace:
         request carries :data:`ON_COMPLETION` (``None``) and is released by
         the engine when a previous request completes, holding in-flight
         concurrency constant.
+    ``diurnal``
+        A non-homogeneous poisson process whose rate swings sinusoidally:
+        tick ``t`` draws ``Poisson(rate * (1 + amplitude * sin(2*pi*t /
+        period)))`` arrivals.  The load swing every deployed service sees
+        over a day, compressed onto the tick clock — what an autoscaling
+        policy has to track (``repro.fleet``).
 
     Examples
     --------
@@ -62,10 +68,12 @@ class ArrivalTrace:
     """
 
     pattern: str = "poisson"
-    rate: float = 1.0  # poisson: mean arrivals per tick
+    rate: float = 1.0  # poisson/diurnal: mean arrivals per tick
     burst_size: int = 4  # burst: requests per front
     burst_gap: int = 4  # burst: ticks between fronts
     concurrency: int = 2  # closed-loop: in-flight target
+    period: int = 32  # diurnal: ticks per rate cycle
+    amplitude: float = 0.8  # diurnal: rate swing fraction in [0, 1]
     seed: int = 0
 
     def __post_init__(self):
@@ -73,14 +81,23 @@ class ArrivalTrace:
             raise ValueError(
                 f"unknown arrival pattern {self.pattern!r} "
                 f"(expected one of {PATTERNS})")
-        if self.pattern == "poisson" and self.rate <= 0:
-            raise ValueError(f"poisson rate must be > 0, got {self.rate}")
+        if self.pattern in ("poisson", "diurnal") and self.rate <= 0:
+            raise ValueError(
+                f"{self.pattern} rate must be > 0, got {self.rate}")
         if self.pattern == "burst" and (self.burst_size < 1
                                         or self.burst_gap < 0):
             raise ValueError("burst_size must be >= 1 and burst_gap >= 0")
         if self.pattern == "closed-loop" and self.concurrency < 1:
             raise ValueError(
                 f"closed-loop concurrency must be >= 1, got {self.concurrency}")
+        if self.pattern == "diurnal":
+            if self.period < 1:
+                raise ValueError(
+                    f"diurnal period must be >= 1 tick, got {self.period}")
+            if not 0.0 <= self.amplitude <= 1.0:
+                raise ValueError(
+                    f"diurnal amplitude must be in [0, 1] (1 = rate swings "
+                    f"to zero at the trough), got {self.amplitude}")
 
     @classmethod
     def from_rps(cls, pattern: str, rps: float, tick_seconds: float,
@@ -90,16 +107,17 @@ class ArrivalTrace:
         read the calibrated value from ``ServeEngine.tick_seconds()`` /
         ``engine.stats["clock"]`` — the ROADMAP tick->wall-clock item).
 
-        ``poisson``: ``rate = rps * tick_seconds`` arrivals per tick.
-        ``burst``: ``burst_gap`` is derived so each ``burst_size`` front
-        sustains ``rps`` on average.  Rate-less patterns (``closed-loop``
-        is concurrency-, not rate-bound) raise rather than silently drop
-        the requested rate."""
+        ``poisson`` / ``diurnal``: ``rate = rps * tick_seconds`` arrivals
+        per tick (the diurnal ``period``/``amplitude`` pass through as
+        tick-denominated knobs).  ``burst``: ``burst_gap`` is derived so
+        each ``burst_size`` front sustains ``rps`` on average.  Rate-less
+        patterns (``closed-loop`` is concurrency-, not rate-bound) raise
+        rather than silently drop the requested rate."""
         if tick_seconds <= 0:
             raise ValueError(f"tick_seconds must be > 0, got {tick_seconds}")
         if rps <= 0:
             raise ValueError(f"rps must be > 0, got {rps}")
-        if pattern == "poisson":
+        if pattern in ("poisson", "diurnal"):
             return cls(pattern, rate=rps * tick_seconds, **kw)
         if pattern == "burst":
             size = kw.pop("burst_size", cls.burst_size)
@@ -123,5 +141,18 @@ class ArrivalTrace:
             return [int(t) for t in np.floor(np.cumsum(gaps))]
         if self.pattern == "burst":
             return [(i // self.burst_size) * self.burst_gap for i in range(n)]
+        if self.pattern == "diurnal":
+            # non-homogeneous poisson by per-tick sampling: tick t draws
+            # Poisson(lam(t)) arrivals with the sinusoid-modulated rate —
+            # exact for integer ticks, seeded, and trivially monotonic
+            rng = np.random.default_rng(self.seed)
+            ticks: list = []
+            t = 0
+            while len(ticks) < n:
+                lam = self.rate * (
+                    1.0 + self.amplitude * np.sin(2.0 * np.pi * t / self.period))
+                ticks += [t] * int(rng.poisson(max(lam, 0.0)))
+                t += 1
+            return ticks[:n]
         head = min(self.concurrency, n)
         return [0] * head + [ON_COMPLETION] * (n - head)

@@ -223,7 +223,9 @@ class ServeEngine:
     # -- submission ----------------------------------------------------------
 
     def submit(self, rid: int, tokens, max_new_tokens: int = 0,
-               arrival_tick: int | None = 0) -> None:
+               arrival_tick: int | None = 0, *,
+               slo_tier: str | None = None,
+               deadline_ticks: int | None = None) -> None:
         """Admit one request; ``tokens`` are the prompt/conditioning ids.
 
         ``arrival_tick`` places the request on the engine's scheduling clock
@@ -232,9 +234,17 @@ class ServeEngine:
         until the clock reaches it, and ``None`` (closed loop,
         :data:`repro.serving.ON_COMPLETION`) releases the request when an
         earlier one completes.  ``ArrivalTrace.ticks`` generates these
-        values for poisson / burst / closed-loop experiments."""
+        values for poisson / burst / closed-loop experiments.
+
+        ``slo_tier`` / ``deadline_ticks`` are the request's SLO class
+        (validated in ``prepare_request``; tier ``None`` = modality
+        default).  A single engine serves tiers FIFO — the class matters to
+        ``repro.fleet.FleetRouter``, which places, preempts and reports by
+        tier."""
         req = self.workload.prepare_request(rid, tokens,
-                                            max_new_tokens=max_new_tokens)
+                                            max_new_tokens=max_new_tokens,
+                                            slo_tier=slo_tier,
+                                            deadline_ticks=deadline_ticks)
         if self.workload.route == "lm":  # lm + cascaded-lm routes alike
             limit = max(self.serve_cfg.buckets)
             if req.prompt_len > limit:
@@ -415,6 +425,38 @@ class ServeEngine:
         self.stats["generate_s"] += dt
         self._record_tier(len(done), dt)
         return [(rid, np.asarray(out)) for rid, out in done]
+
+    # -- fleet hooks: stage-boundary preemption / migration ------------------
+
+    def _require_pipeline(self, what: str):
+        if self.pipeline is None:
+            raise ValueError(
+                f"{what} requires the cascade route (stage-boundary state "
+                f"lives in the pipeline's StageBuffers); this engine serves "
+                f"route {self.route!r} — construct it with "
+                f"ServeConfig(route='cascade')")
+        return self.pipeline
+
+    def parked_rids(self) -> list[int]:
+        """Rids whose per-stage state is parked at a stage boundary inside
+        this engine's pipeline — the preemptible set (empty off the cascade
+        route)."""
+        return ([] if self.pipeline is None
+                else self.pipeline.queued_rids())
+
+    def preempt(self, rids) -> list:
+        """Preempt ``rids`` at their current cascade stage boundary and
+        return their parked state (``ParkedTask`` payloads).  The fleet
+        router resumes them later — on this engine or on another replica
+        whose engine shares this one's ``ServeConfig.seed``; under the
+        ``stage_key(seed, rid, stage_index)`` fold the output is
+        bit-identical either way (``tests/test_route_parity.py``)."""
+        return self._require_pipeline("preempt()").park(rids)
+
+    def resume(self, parked: list) -> None:
+        """Re-admit parked stage state (from :meth:`preempt`, possibly on a
+        different replica) at its recorded stage boundary."""
+        self._require_pipeline("resume()").resume(parked)
 
     def _finalize_cascade_stats(self) -> None:
         """Refresh ``stats["cascade"]`` once the pipeline drains (summary

@@ -7,12 +7,14 @@ resolves any registered config (LM, diffusion, AR-image, TTV) to its
 
 from repro.workload.base import (
     SERVE_ROUTES,
+    SLO_TIERS,
     WORKLOAD_ROUTES,
     CostDescriptor,
     GenRequest,
     GenerativeWorkload,
     Stage,
     build_model,
+    default_slo_tier,
     reduced_config,
     reduced_workload,
     register_workload,
@@ -35,7 +37,9 @@ from repro.workload.ttv import MakeAVideoWorkload, PhenakiWorkload
 
 __all__ = [
     "SERVE_ROUTES",
+    "SLO_TIERS",
     "WORKLOAD_ROUTES",
+    "default_slo_tier",
     "CostDescriptor",
     "GenRequest",
     "GenerativeWorkload",

@@ -51,6 +51,26 @@ import numpy as np
 WORKLOAD_ROUTES = ("lm", "pod")
 SERVE_ROUTES = ("lm", "pod", "cascade")
 
+# ---------------------------------------------------------------------------
+# SLO classes (fleet serving)
+# ---------------------------------------------------------------------------
+#
+# Deployment-level scheduling (the arXiv:2410.00215 follow-up knob) needs a
+# per-request service class: ``"interactive"`` requests are latency-bound
+# (short TTI / LM traffic, steered and preempted for), ``"batch"`` requests
+# are throughput-bound (long TTV jobs, preemptible at cascade stage
+# boundaries).  The tier + optional ``deadline_ticks`` live on ``GenRequest``
+# and are validated at ``prepare_request``; ``repro.fleet.FleetRouter``
+# consumes them for placement, preemption and deadline-attainment reporting.
+
+SLO_TIERS = ("interactive", "batch")
+
+
+def default_slo_tier(modality: str) -> str:
+    """The paper's traffic-mix default: video generation is long-running
+    batch work, text/image requests are interactive."""
+    return "batch" if modality == "video" else "interactive"
+
 
 # ---------------------------------------------------------------------------
 # Per-request PRNG contract
@@ -94,7 +114,14 @@ class GenRequest:
     ``route`` is the *workload* route (``"lm" | "pod"`` — which scheduler
     family admits the request); the engine may still *serve* it on the
     ``"cascade"`` route.  See the route-taxonomy note at the top of this
-    module."""
+    module.
+
+    ``slo_tier`` (``SLO_TIERS``) + ``deadline_ticks`` are the request's SLO
+    class for fleet serving: ``"interactive"`` traffic is placed and
+    preempted for, ``"batch"`` traffic is preemptible at cascade stage
+    boundaries; ``deadline_ticks`` (``None`` = best-effort) is the e2e
+    latency budget on the fleet's tick clock that deadline-attainment
+    reporting keys off."""
 
     rid: int
     modality: str  # "text" | "image" | "video"
@@ -102,6 +129,8 @@ class GenRequest:
     tokens: Any  # (S,) int32 prompt / text-conditioning ids
     max_new_tokens: int = 0  # LM decode budget
     denoise_steps: int = 0  # iterative-refinement step count (pod route)
+    slo_tier: str = "interactive"  # SLO class (see SLO_TIERS)
+    deadline_ticks: int | None = None  # e2e budget in ticks (None = none)
     meta: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -110,6 +139,14 @@ class GenRequest:
                 f"unknown workload route {self.route!r} (expected one of "
                 f"{WORKLOAD_ROUTES}; 'cascade' is a serve route — pass it "
                 f"via ServeConfig.route, not on the request)")
+        if self.slo_tier not in SLO_TIERS:
+            raise ValueError(
+                f"unknown SLO tier {self.slo_tier!r} (expected one of "
+                f"{SLO_TIERS})")
+        if self.deadline_ticks is not None and self.deadline_ticks <= 0:
+            raise ValueError(
+                f"deadline_ticks must be > 0 (or None for best-effort), "
+                f"got {self.deadline_ticks}")
 
     @property
     def prompt_len(self) -> int:
@@ -219,13 +256,22 @@ class GenerativeWorkload:
         return self.cfg.text.max_len
 
     def prepare_request(self, rid: int, tokens, *, max_new_tokens: int = 0,
+                        slo_tier: str | None = None,
+                        deadline_ticks: int | None = None,
                         **meta) -> GenRequest:
+        """Modality-specific inputs -> a validated :class:`GenRequest`.
+        ``slo_tier=None`` picks the modality default (video = batch, else
+        interactive); an unknown tier or non-positive deadline raises here,
+        before the request reaches any scheduler."""
         cd = self.cost_descriptor()
         return GenRequest(
             rid=rid, modality=self.modality, route=self.route,
             tokens=np.asarray(tokens, np.int32),
             max_new_tokens=max_new_tokens,
             denoise_steps=cd.iterative_steps() if self.route == "pod" else 0,
+            slo_tier=(default_slo_tier(self.modality) if slo_tier is None
+                      else slo_tier),
+            deadline_ticks=deadline_ticks,
             meta=meta,
         )
 

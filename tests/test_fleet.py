@@ -1,0 +1,345 @@
+"""Fleet serving (ISSUE 6): SLO-classed routing over N engine replicas,
+stage-boundary preemption/migration, and the autoscaling A/B.
+
+The SLO-vs-FIFO acceptance pin lives here: on a mixed TTV(batch)+TTI
+(interactive) trace, SLO-aware routing + preemption must measurably improve
+interactive-tier deadline attainment over the FIFO single-replica baseline.
+The bit-identity of preempt/resume across replicas is pinned in
+``tests/test_route_parity.py``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs.suite  # noqa: F401 — registers the paper suite
+from repro.configs import get_config
+from repro.configs.tiny import TINY_TTI_CASCADE, TINY_TTV_CASCADE
+from repro.fleet import (
+    PLACEMENT_POLICIES,
+    AutoscalePolicy,
+    FleetRouter,
+    RequestMeta,
+)
+from repro.serving import ArrivalTrace
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.workload import reduced_workload, workload_for
+from repro.workload.base import SLO_TIERS, default_slo_tier
+
+
+@pytest.fixture(scope="module")
+def pools():
+    tti = workload_for(TINY_TTI_CASCADE)
+    ttv = workload_for(TINY_TTV_CASCADE)
+    key = jax.random.PRNGKey(0)
+    return {"tti": (tti, tti.init(key)), "ttv": (ttv, ttv.init(key))}
+
+
+CFG = ServeConfig(max_batch=2, pod_size=2, queue_capacity=4, seed=0)
+
+
+def _prompt(wl, seed=0, n=8):
+    return np.random.default_rng(seed).integers(0, wl.prompt_vocab, n)
+
+
+# ---------------------------------------------------------------------------
+# SLO classes on GenRequest (validated at prepare_request)
+# ---------------------------------------------------------------------------
+
+
+def test_slo_tier_defaults_by_modality(pools):
+    """slo_tier=None picks the paper's traffic-mix default: video = batch
+    (long-running), image/text = interactive."""
+    tti, ttv = pools["tti"][0], pools["ttv"][0]
+    assert default_slo_tier("video") == "batch"
+    assert default_slo_tier("image") == "interactive"
+    assert tti.prepare_request(0, _prompt(tti)).slo_tier == "interactive"
+    assert ttv.prepare_request(0, _prompt(ttv)).slo_tier == "batch"
+    lm = reduced_workload(get_config("olmo-1b"))
+    assert lm.prepare_request(0, _prompt(lm)).slo_tier == "interactive"
+
+
+def test_slo_class_validated_at_prepare_request(pools):
+    wl = pools["tti"][0]
+    req = wl.prepare_request(1, _prompt(wl), slo_tier="batch",
+                             deadline_ticks=9)
+    assert req.slo_tier == "batch" and req.deadline_ticks == 9
+    with pytest.raises(ValueError, match="SLO tier"):
+        wl.prepare_request(2, _prompt(wl), slo_tier="bulk")
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        wl.prepare_request(3, _prompt(wl), deadline_ticks=0)
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        wl.prepare_request(4, _prompt(wl), deadline_ticks=-3)
+    assert SLO_TIERS == ("interactive", "batch")
+
+
+def test_engine_submit_threads_slo_class_through(pools):
+    """ServeEngine.submit passes the SLO class to prepare_request, so a bad
+    tier/deadline raises at submission — before any scheduler sees it."""
+    wl, params = pools["tti"]
+    eng = ServeEngine(wl, params, CFG)
+    with pytest.raises(ValueError, match="SLO tier"):
+        eng.submit(0, _prompt(wl), slo_tier="platinum")
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        eng.submit(0, _prompt(wl), deadline_ticks=-1)
+
+
+def test_preempt_requires_cascade_route():
+    """Stage-boundary preemption needs the cascade route (state between
+    ticks lives in StageBuffers); other routes must refuse loudly."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    eng = ServeEngine(wl, {}, ServeConfig(max_batch=2, buckets=(8,)))
+    assert eng.parked_rids() == []  # benign on non-cascade routes
+    with pytest.raises(ValueError, match="cascade route"):
+        eng.preempt([0])
+    with pytest.raises(ValueError, match="cascade route"):
+        eng.resume([])
+
+
+# ---------------------------------------------------------------------------
+# Router construction + placement policies
+# ---------------------------------------------------------------------------
+
+
+def test_router_rejects_bad_configs(pools):
+    with pytest.raises(ValueError, match="placement policy"):
+        FleetRouter(pools, CFG, policy="random")
+    with pytest.raises(ValueError, match="preempt"):
+        FleetRouter(pools, CFG, policy="least-queue", preempt=True)
+    with pytest.raises(ValueError, match="n_replicas"):
+        FleetRouter(pools, CFG, n_replicas=0)
+    fleet = FleetRouter(pools, CFG, n_replicas=1)
+    wl = pools["tti"][0]
+    with pytest.raises(ValueError, match="unknown pool"):
+        fleet.submit("t2i", 0, _prompt(wl))
+    with pytest.raises(ValueError, match="timed arrivals"):
+        fleet.submit("tti", 0, _prompt(wl), arrival_tick=None)
+    fleet.submit("tti", 0, _prompt(wl), arrival_tick=0)
+    with pytest.raises(ValueError, match="duplicate rid"):
+        fleet.submit("tti", 0, _prompt(wl), arrival_tick=1)
+    # SLO validation fires at fleet submission too (prepare_request)
+    with pytest.raises(ValueError, match="SLO tier"):
+        fleet.submit("tti", 1, _prompt(wl), slo_tier="bronze")
+
+
+def test_round_robin_placement_cycles(pools):
+    fleet = FleetRouter(pools, CFG, n_replicas=3, policy="round-robin")
+    wl = pools["tti"][0]
+    for rid in range(6):
+        fleet.submit("tti", rid, _prompt(wl), arrival_tick=0)
+    fleet._admit_due()
+    owners = {rid: rep.index for rep in fleet.replicas
+              for rid in rep.meta}
+    assert [owners[r] for r in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_queue_placement_picks_unloaded_replica(pools):
+    fleet = FleetRouter(pools, CFG, n_replicas=2, policy="least-queue")
+    wl = pools["tti"][0]
+    # pre-load replica 0 directly (bypassing the router)
+    for rid in range(100, 103):
+        fleet.replicas[0].submit(
+            _prompt(wl), RequestMeta(rid=rid, pool="tti", tier="batch",
+                                     deadline_ticks=None, arrival=0))
+    fleet.submit("tti", 0, _prompt(wl), arrival_tick=0)
+    fleet._admit_due()
+    assert 0 in fleet.replicas[1].meta  # routed around the loaded replica
+
+
+def test_slo_placement_segregates_tiers(pools):
+    """Tier-aware placement: with capacity available, interactive traffic
+    avoids the replica holding batch work (and vice versa)."""
+    fleet = FleetRouter(pools, CFG, n_replicas=2, policy="slo")
+    ttv, tti = pools["ttv"][0], pools["tti"][0]
+    fleet.submit("ttv", 100, _prompt(ttv), arrival_tick=0, slo_tier="batch")
+    fleet.submit("tti", 0, _prompt(tti), arrival_tick=0,
+                 slo_tier="interactive")
+    fleet.submit("tti", 1, _prompt(tti), arrival_tick=0,
+                 slo_tier="interactive")
+    fleet._admit_due()
+    batch_rep = next(r for r in fleet.replicas if 100 in r.meta)
+    inter_reps = {next(r.index for r in fleet.replicas if rid in r.meta)
+                  for rid in (0, 1)}
+    assert inter_reps == {1 - batch_rep.index}  # disjoint from the batch one
+
+
+# ---------------------------------------------------------------------------
+# Migration mechanics (slo policy + preempt=True)
+# ---------------------------------------------------------------------------
+
+
+def test_migration_moves_parked_batch_work_to_unloaded_replica(pools):
+    """When a replica has interactive backlog AND batch state parked at
+    stage boundaries, _migrate() moves that parked state to a strictly
+    less-loaded replica — preempt() on the source, resume() on the
+    destination, meta ledger updated, counters recorded."""
+    fleet = FleetRouter(pools, CFG, n_replicas=2, policy="slo", preempt=True)
+    src, dst = fleet.replicas
+    ttv, tti = pools["ttv"][0], pools["tti"][0]
+    for rid in (100, 101):  # batch pod onto the SOURCE replica directly
+        src.submit(_prompt(ttv), RequestMeta(rid=rid, pool="ttv",
+                                             tier="batch",
+                                             deadline_ticks=None, arrival=0))
+    src.engines["ttv"].step()  # park the pod at its first stage boundary
+    assert set(src.parked_rids("ttv", tier="batch")) == {100, 101}
+    # interactive backlog lands on the same replica
+    src.submit(_prompt(tti), RequestMeta(rid=0, pool="tti",
+                                         tier="interactive",
+                                         deadline_ticks=8, arrival=0))
+    fleet._migrate()
+    assert fleet.migrations == 2
+    assert src.parked_rids("ttv") == []
+    assert set(dst.parked_rids("ttv", tier="batch")) == {100, 101}
+    assert set(dst.meta) == {100, 101} and set(src.meta) == {0}
+    assert dst.engines["ttv"].pipeline.resumed == 2
+    # both sides drain to completion after the migration
+    while src.pending() or dst.pending():
+        src.step("slo")
+        dst.step("slo")
+    assert not src.meta and not dst.meta
+
+
+def test_migration_skipped_without_strict_improvement(pools):
+    """No thrash: parked batch work stays put unless a strictly less-loaded
+    destination exists."""
+    fleet = FleetRouter(pools, CFG, n_replicas=2, policy="slo", preempt=True)
+    ttv, tti = pools["ttv"][0], pools["tti"][0]
+    for rep in fleet.replicas:  # both replicas equally loaded with batch
+        base = 100 + rep.index * 10
+        for rid in (base, base + 1):
+            rep.submit(_prompt(ttv), RequestMeta(rid=rid, pool="ttv",
+                                                 tier="batch",
+                                                 deadline_ticks=None,
+                                                 arrival=0))
+        rep.engines["ttv"].step()
+    fleet.replicas[0].submit(
+        _prompt(tti), RequestMeta(rid=0, pool="tti", tier="interactive",
+                                  deadline_ticks=8, arrival=0))
+    fleet._migrate()
+    assert fleet.migrations == 0  # dst.pending() + moved >= src.pending()
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_policy_steps_and_clamps():
+    pol = AutoscalePolicy(min_replicas=1, max_replicas=3, target_queue=4.0)
+    assert pol.desired(1, 0) == 1  # never below min
+    assert pol.desired(1, 5) == 2  # one step up toward ceil(5/4)=2
+    assert pol.desired(1, 100) == 2  # ...even when the target is far
+    assert pol.desired(3, 100) == 3  # never above max
+    assert pol.desired(3, 4) == 2  # one step down
+    assert pol.desired(2, 8) == 2  # on target: hold
+    with pytest.raises(ValueError, match="min_replicas"):
+        AutoscalePolicy(min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError, match="target_queue"):
+        AutoscalePolicy(target_queue=0.0)
+    with pytest.raises(ValueError, match="cooldown"):
+        AutoscalePolicy(cooldown=-1)
+
+
+def test_autoscaled_fleet_tracks_diurnal_load_and_saves_replica_ticks(pools):
+    """The autoscale A/B: on a diurnal trace the autoscaled fleet completes
+    everything, actually scales (events recorded), and consumes fewer
+    replica-ticks than the fixed fleet of max_replicas."""
+    def run(autoscale):
+        fleet = FleetRouter({"tti": pools["tti"]}, CFG, n_replicas=3,
+                            policy="least-queue", autoscale=autoscale)
+        fleet.submit_trace(
+            "tti", ArrivalTrace("diurnal", rate=0.8, period=12,
+                                amplitude=0.9, seed=1),
+            8, deadline_ticks=12)
+        assert len(fleet.run()) == 8
+        return fleet.summary()
+
+    fixed = run(None)
+    auto = run(AutoscalePolicy(min_replicas=1, max_replicas=3,
+                               target_queue=3.0, cooldown=2))
+    assert fixed["autoscale"] is None
+    assert auto["autoscale"]["scale_events"]  # it scaled at least once
+    assert auto["replicas"]["mean_active"] < fixed["replicas"]["mean_active"]
+    assert (auto["replicas"]["replica_ticks"]
+            < fixed["replicas"]["replica_ticks"])
+    assert auto["completed"] == fixed["completed"] == 8
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fleet serving + stats schema + the SLO-vs-FIFO acceptance pin
+# ---------------------------------------------------------------------------
+
+
+def _mixed_fleet(pools, n_replicas, policy, preempt, deadline=3):
+    """The bench_fleet scenario, smaller: a batch TTV front at tick 0,
+    interactive TTI landing mid-flight with a tight deadline."""
+    fleet = FleetRouter(pools, CFG, n_replicas=n_replicas, policy=policy,
+                        preempt=preempt)
+    ttv, tti = pools["ttv"][0], pools["tti"][0]
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        fleet.submit("ttv", 100 + i, rng.integers(0, ttv.prompt_vocab, 8),
+                     arrival_tick=0, slo_tier="batch")
+    for i in range(4):
+        fleet.submit("tti", i, rng.integers(0, tti.prompt_vocab, 8),
+                     arrival_tick=2 + 2 * (i // 2), slo_tier="interactive",
+                     deadline_ticks=deadline)
+    results = fleet.run()
+    assert set(results) == {100, 101, 102, 103, 104, 105, 0, 1, 2, 3}
+    return fleet.summary()
+
+
+def test_fleet_e2e_stats_schema(pools):
+    """engine.stats["fleet"] carries the documented schema (docs/fleet.md)
+    and is mirrored into every replica engine at drain."""
+    assert set(PLACEMENT_POLICIES) == {"round-robin", "least-queue", "slo"}
+    fleet = FleetRouter(pools, CFG, n_replicas=2, policy="slo", preempt=True)
+    ttv, tti = pools["ttv"][0], pools["tti"][0]
+    fleet.submit("ttv", 100, _prompt(ttv), arrival_tick=0, slo_tier="batch")
+    fleet.submit("tti", 0, _prompt(tti), arrival_tick=1,
+                 slo_tier="interactive", deadline_ticks=10)
+    fleet.run()
+    s = fleet.summary()
+    assert set(s) >= {"policy", "engine_policy", "preempt", "pools", "ticks",
+                      "requests", "completed", "tiers", "preemptions",
+                      "preempted_ticks", "parked", "resumed", "migrations",
+                      "replicas", "autoscale"}
+    assert s["requests"] == s["completed"] == 2
+    assert set(s["tiers"]) == set(SLO_TIERS)
+    for t in s["tiers"].values():
+        assert set(t) == {"requests", "latency_ticks", "deadline_requests",
+                          "deadline_attainment", "deadline_misses",
+                          "deadline_margin_ticks"}
+        assert set(t["latency_ticks"]) == {"p50", "p95", "mean", "max"}
+        assert 0.0 <= t["deadline_attainment"] <= 1.0
+    it = s["tiers"]["interactive"]
+    assert it["deadline_requests"] == 1
+    rep = s["replicas"]
+    assert rep["configured"] == 2
+    assert len(rep["utilization"]) == 2
+    assert rep["replica_ticks"] >= s["ticks"] >= 1
+    # mirrored into EVERY replica engine's stats
+    for r in fleet.replicas:
+        for eng in r.engines.values():
+            assert eng.stats["fleet"] is not None
+            assert eng.stats["fleet"]["policy"] == "slo"
+
+
+def test_slo_fleet_beats_fifo_baseline_on_interactive_deadlines(pools):
+    """THE acceptance pin: on the mixed TTV+TTI trace, SLO-aware routing
+    with stage-boundary preemption measurably improves interactive-tier
+    deadline attainment AND p95 latency over the FIFO single-replica
+    baseline — and actually exercised preemption to do it."""
+    fifo = _mixed_fleet(pools, n_replicas=1, policy="round-robin",
+                        preempt=False)
+    slo = _mixed_fleet(pools, n_replicas=2, policy="slo", preempt=True)
+    f_it, s_it = fifo["tiers"]["interactive"], slo["tiers"]["interactive"]
+    assert s_it["deadline_attainment"] > f_it["deadline_attainment"]
+    assert (s_it["latency_ticks"]["p95"] < f_it["latency_ticks"]["p95"])
+    # the win came from preemption, not luck: batch work demonstrably sat
+    # parked at stage boundaries while interactive work was served
+    assert slo["preempted_ticks"] > 0
+    # the FIFO baseline never preempts
+    assert fifo["preempted_ticks"] == 0 and fifo["preemptions"] == 0
+    # batch tier still completed everything (work conservation)
+    assert slo["tiers"]["batch"]["requests"] == 6

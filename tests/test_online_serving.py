@@ -61,6 +61,48 @@ def test_arrival_trace_rejects_bad_configs():
         ArrivalTrace("poisson", rate=0.0)
     with pytest.raises(ValueError, match="concurrency"):
         ArrivalTrace("closed-loop", concurrency=0)
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalTrace("diurnal", rate=0.0)
+    with pytest.raises(ValueError, match="period"):
+        ArrivalTrace("diurnal", rate=1.0, period=0)
+    with pytest.raises(ValueError, match="amplitude"):
+        ArrivalTrace("diurnal", rate=1.0, amplitude=1.5)
+    with pytest.raises(ValueError, match="amplitude"):
+        ArrivalTrace("diurnal", rate=1.0, amplitude=-0.1)
+
+
+def test_arrival_trace_diurnal_is_seeded_and_sinusoidal():
+    """The diurnal pattern (satellite): a seeded non-homogeneous poisson
+    whose rate swings sinusoidally over `period` ticks — arrivals must
+    concentrate in the rising half of each cycle."""
+    a = ArrivalTrace("diurnal", rate=1.0, period=8, amplitude=0.9,
+                     seed=5).ticks(64)
+    b = ArrivalTrace("diurnal", rate=1.0, period=8, amplitude=0.9,
+                     seed=5).ticks(64)
+    c = ArrivalTrace("diurnal", rate=1.0, period=8, amplitude=0.9,
+                     seed=6).ticks(64)
+    assert a == b and a != c
+    assert len(a) == 64 and a == sorted(a)
+    assert all(isinstance(t, int) and t >= 0 for t in a)
+    # sin(2*pi*t/8) > 0 for t%8 in {1,2,3} (the peak), < 0 for {5,6,7}
+    # (the trough): with amplitude 0.9 the peak half must dominate
+    peak = sum(1 for t in a if t % 8 in (1, 2, 3))
+    trough = sum(1 for t in a if t % 8 in (5, 6, 7))
+    assert peak > trough
+    # amplitude=0 degenerates to a flat per-tick poisson at `rate`
+    flat = ArrivalTrace("diurnal", rate=1.0, period=8, amplitude=0.0,
+                        seed=5).ticks(64)
+    assert len(flat) == 64 and flat == sorted(flat)
+
+
+def test_arrival_trace_diurnal_from_rps():
+    """from_rps handles diurnal like poisson (rate = rps * tick_seconds)
+    and passes the tick-denominated period/amplitude knobs through."""
+    tr = ArrivalTrace.from_rps("diurnal", rps=4.0, tick_seconds=0.5,
+                               period=16, amplitude=0.5, seed=1)
+    assert tr.pattern == "diurnal"
+    assert tr.rate == pytest.approx(2.0)
+    assert tr.period == 16 and tr.amplitude == 0.5
 
 
 # ---------------------------------------------------------------------------
@@ -457,6 +499,35 @@ def test_arrival_trace_rates_stated_in_requests_per_second():
         ArrivalTrace.from_rps("poisson", rps=-1.0, tick_seconds=0.5)
     with pytest.raises(ValueError, match="no arrival rate"):
         ArrivalTrace.from_rps("closed-loop", rps=1.0, tick_seconds=0.5)
+
+
+def test_stage_buffer_free_slots_reports_real_capacity():
+    """Satellite fix: ``free_slots`` reports the REAL free capacity —
+    ``None`` for unbounded buffers, not a fake large finite number that
+    would spuriously saturate any load signal summed over it.  ``room()``
+    keeps the comparison-safe math.inf view for backpressure bounds."""
+    import math
+
+    from repro.pipeline import StageBuffer, StageTask
+
+    unbounded = StageBuffer("admission", capacity=None)
+    assert unbounded.free_slots() is None
+    assert unbounded.room() == math.inf
+    for i in range(1000):
+        assert unbounded.push(StageTask(rid=i, state={}))
+    assert unbounded.free_slots() is None  # still unbounded, not 2**30-1000
+
+    bounded = StageBuffer("handoff", capacity=2)
+    assert bounded.free_slots() == 2 and bounded.room() == 2
+    assert bounded.push(StageTask(rid=0, state={}))
+    assert bounded.free_slots() == 1
+    assert bounded.push(StageTask(rid=1, state={}))
+    assert bounded.free_slots() == 0 and bounded.room() == 0
+    assert not bounded.push(StageTask(rid=2, state={}))  # backpressure
+    # force=True bypasses the bound (migration landing) and never goes
+    # negative in the report
+    assert bounded.push(StageTask(rid=2, state={}), force=True)
+    assert len(bounded) == 3 and bounded.free_slots() == 0
 
 
 def test_percentiles_helper_empty_and_basic():

@@ -140,6 +140,52 @@ def test_sampling_is_batch_composition_invariant(rng_key):
 
 
 # ---------------------------------------------------------------------------
+# Stage-boundary preempt/resume parity (fleet serving, ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_resume_on_second_replica_bit_identical(rng_key):
+    """A request preempted at a cascade stage boundary and resumed on a
+    DIFFERENT replica (a second engine with the same ServeConfig.seed)
+    must produce bit-identical output: ParkedTask carries the stage state,
+    and the (seed, rid, stage_index) fold pins all remaining noise —
+    nothing depends on which pipeline finishes the request."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(rng_key)
+    prompts = _prompts(wl)
+    baseline = _serve(wl, params, prompts, "cascade")
+
+    def replica():
+        return ServeEngine(wl, params,
+                           ServeConfig(max_batch=POD, buckets=(PROMPT_LEN,),
+                                       route="cascade", queue_capacity=POD))
+
+    a = replica()
+    for rid, p in enumerate(prompts):
+        a.submit(rid, p)
+    a.step()  # one scheduling round: every request now sits between stages
+    rids = a.parked_rids()
+    assert set(rids) == set(range(N_REQ))
+    parked = a.preempt(rids)
+    assert a.pending() == 0  # fully preempted off replica A
+    assert {p.rid for p in parked} == set(range(N_REQ))
+    # at least one request was parked MID-cascade (past the first stage),
+    # so the resume genuinely continues from an interior stage boundary
+    assert max(p.stage_index for p in parked) > 0
+    assert a.pipeline.parked == N_REQ
+
+    b = replica()  # the "other replica": fresh engine, same seed
+    b.resume(parked)
+    assert b.pipeline.resumed == N_REQ
+    results = {rid: np.asarray(out) for rid, out in b.run().items()}
+    assert set(results) == set(range(N_REQ))
+    for rid in results:
+        np.testing.assert_array_equal(
+            results[rid], baseline[rid],
+            err_msg=f"preempt/resume changed output bits, rid {rid}")
+
+
+# ---------------------------------------------------------------------------
 # stage_impl on the pod route (acceptance spy)
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,9 @@ import dataclasses
 import threading
 from typing import Any, Iterator
 
+import jax.numpy as jnp
+import numpy as np
+
 _state = threading.local()
 
 
@@ -58,6 +61,43 @@ class Trace:
 
     def scoped_name(self, name: str) -> str:
         return "/".join(self.scopes + [name]) if self.scopes else name
+
+    def to_chrome_trace(self, path: str | None = None, hw=None) -> list[dict]:
+        """OpEvent stream -> Chrome trace events on the modeled-time axis.
+
+        Events are laid out sequentially in recorded (call) order — the same
+        axis ``core.seq_profile`` uses — with each slice's duration the
+        roofline ``core.perf_model.op_time`` on ``hw`` (default TPU v5e),
+        one thread lane per top-level scope segment.  With ``path`` set the
+        events are also written as a trace JSON viewable in Perfetto,
+        alongside the serving-span traces (``docs/observability.md``)."""
+        from repro.core.perf_model import TPU_V5E, op_time
+
+        hw = hw or TPU_V5E
+        lanes: dict[str, int] = {}
+        events: list[dict] = []
+        cursor_us = 0.0
+        for e in self.events:
+            lane = e.name.split("/", 1)[0] if "/" in e.name else "top"
+            tid = lanes.setdefault(lane, len(lanes))
+            dur_us = op_time(e, hw) * 1e6
+            events.append({
+                "name": e.name, "cat": e.op, "ph": "X",
+                "ts": cursor_us, "dur": dur_us, "pid": 0, "tid": tid,
+                "args": {"flops": e.total_flops, "bytes_hbm": e.total_bytes,
+                         "seq_len": e.seq_len, "repeats": e.repeats},
+            })
+            cursor_us += dur_us
+        meta = [{"ph": "M", "name": "process_name", "pid": 0,
+                 "args": {"name": f"characterization/{hw.name}"}}]
+        meta += [{"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+                  "args": {"name": lane}} for lane, tid in lanes.items()]
+        events = meta + events
+        if path is not None:
+            from repro.telemetry.chrome_trace import write_trace
+
+            write_trace(path, events, hardware=hw.name)
+        return events
 
 
 def _traces() -> list[Trace]:
@@ -128,7 +168,4 @@ def scale_events(events: list[OpEvent], n: int) -> list[OpEvent]:
 
 
 def dtype_bytes(dtype) -> int:
-    import jax.numpy as jnp
-    import numpy as np
-
     return np.dtype(jnp.dtype(dtype)).itemsize

@@ -79,6 +79,9 @@ class FleetReplica:
             name: ServeEngine(wl, params, cfg)
             for name, (wl, params) in normalize_pools(pools).items()
         }
+        for name, eng in self.engines.items():
+            # one Chrome-trace track per (replica, pool) engine timeline
+            eng.spans.track = f"replica{index}/{name}"
         self.meta: dict[int, RequestMeta] = {}  # rid -> in-flight meta
         self.active = True  # False = draining (autoscaled out): no placements
         self.ticks = 0
@@ -170,14 +173,23 @@ class FleetReplica:
                 metas = interactive
         return min(metas, key=lambda m: (m.arrival, m.rid)).pool
 
-    def step(self, policy: str = "fifo") -> list:
+    def step(self, policy: str = "fifo", now: int | None = None) -> list:
         """One device tick: serve one pool's engine for one scheduling
-        round.  Returns completed ``(rid, output, RequestMeta)`` triples."""
+        round.  Returns completed ``(rid, output, RequestMeta)`` triples.
+
+        ``now`` is the fleet tick this device tick runs at (when driven by
+        ``FleetRouter``); it only feeds the telemetry clock map — engine
+        scheduling state is untouched — so per-replica span tracks align on
+        the shared fleet timeline even though an engine's local clock
+        advances only when its pool is chosen."""
         self.ticks += 1
         pool = self.choose_pool(policy)
         if pool is None:
             self._last_pool = None
             return []
+        if now is not None:
+            eng = self.engines[pool]
+            eng.spans.map_tick(eng._tick, now)
         # implicit stage-boundary preemption accounting: serving this pool
         # while batch work sits parked in another pool's pipeline
         starved = [p for p in self.engines

@@ -41,8 +41,8 @@ import numpy as np
 
 from repro.fleet.autoscale import AutoscalePolicy
 from repro.fleet.replica import FleetReplica, RequestMeta, normalize_pools
-from repro.pipeline import percentiles
 from repro.serving.engine import ServeConfig
+from repro.telemetry import SpanCollector, percentiles, write_chrome_trace
 from repro.workload.base import SLO_TIERS
 
 PLACEMENT_POLICIES = ("round-robin", "least-queue", "slo")
@@ -104,6 +104,8 @@ class FleetRouter:
         self._last_scale = -(10 ** 9)
         self._rr = 0
         self._stats: dict | None = None
+        # fleet-scope instants (migrate/scale) on the fleet tick clock
+        self.spans = SpanCollector(track="fleet")
 
     # -- submission ----------------------------------------------------------
 
@@ -214,6 +216,11 @@ class FleetRouter:
                 tasks, metas = src.migrate_out(pool, rids)
                 dst.migrate_in(pool, tasks, metas)
                 self.migrations += len(tasks)
+                for t in tasks:
+                    self.spans.instant(
+                        "migrate", tick=self._tick, cat="preempt",
+                        lane="migrate", rid=t.rid, pool=pool,
+                        src=src.index, dst=dst.index)
 
     # -- autoscaling ---------------------------------------------------------
 
@@ -235,6 +242,9 @@ class FleetRouter:
             out = min(self._active(), key=lambda r: (r.pending(), -r.index))
             out.active = False
         self.scale_events.append((self._tick, len(self._active())))
+        self.spans.instant("scale", tick=self._tick, cat="sched",
+                           lane="autoscale", active=len(self._active()),
+                           backlog=backlog)
 
     # -- the shared fleet tick -----------------------------------------------
 
@@ -252,7 +262,8 @@ class FleetRouter:
             if not (rep.active or rep.pending()):
                 continue
             stepped += 1
-            for rid, out, meta in rep.step(self.engine_policy):
+            for rid, out, meta in rep.step(self.engine_policy,
+                                           now=self._tick):
                 latency = self._tick - meta.arrival
                 met = (meta.deadline_ticks is None
                        or latency <= meta.deadline_ticks)
@@ -279,6 +290,32 @@ class FleetRouter:
         while self.pending():
             self.step()
         return dict(self.results)
+
+    # -- telemetry export ----------------------------------------------------
+
+    def collectors(self) -> list:
+        """All span collectors: fleet instants + every replica engine."""
+        cols = [self.spans]
+        for rep in self.replicas:
+            cols += [e.spans for e in rep.engines.values()]
+        return cols
+
+    def tick_seconds(self) -> float:
+        """Fleet-clock wall seconds per tick: the median over the replica
+        engines' calibrated clocks (they time-share identical devices)."""
+        samples = [ts for rep in self.replicas
+                   for e in rep.engines.values()
+                   if (ts := e.tick_seconds()) > 0]
+        return float(np.median(samples)) if samples else 0.0
+
+    def export_chrome_trace(self, path: str, **metadata) -> int:
+        """Write the whole fleet's timeline as Chrome trace-event JSON: one
+        track per (replica, pool) engine plus a fleet track carrying the
+        migrate/scale instants, all on the shared fleet tick clock (replica
+        span ticks are remapped through the per-step clock map).  Open at
+        https://ui.perfetto.dev.  Returns the event count."""
+        return write_chrome_trace(path, self.collectors(),
+                                  self.tick_seconds() or 1.0, **metadata)
 
     # -- reporting -----------------------------------------------------------
 

@@ -19,6 +19,7 @@ scheduling ticks and join partially-drained stage queues mid-flight), and
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -29,7 +30,15 @@ from repro.configs import get_config, list_configs
 from repro.fleet import PLACEMENT_POLICIES, AutoscalePolicy, FleetRouter
 from repro.serving import PATTERNS, ArrivalTrace
 from repro.serving.engine import ServeConfig, ServeEngine
+from repro.telemetry import json_ready
 from repro.workload import reduced_workload, workload_for
+
+
+def dump_stats_json(path: str, stats: dict) -> None:
+    """Write a stats/summary dict as JSON (numpy scalars sanitized)."""
+    with open(path, "w") as f:
+        json.dump(json_ready(stats), f, indent=2)
+    print(f"stats json -> {path}")
 
 
 def parse_stage_impl(spec: str | None) -> dict | None:
@@ -106,6 +115,12 @@ def run_fleet(args, workload, params, serve_cfg, arrivals) -> None:
           f"{s['replicas']['replica_ticks']}")
     if s["autoscale"] is not None:
         print(f"  autoscale events: {s['autoscale']['scale_events']}")
+    if args.trace_out:
+        n = fleet.export_chrome_trace(args.trace_out)
+        print(f"chrome trace ({n} events, per-replica tracks) -> "
+              f"{args.trace_out}")
+    if args.stats_json:
+        dump_stats_json(args.stats_json, s)
 
 
 def main():
@@ -165,6 +180,14 @@ def main():
     ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
                     help="fleet: queue-depth autoscaling between MIN and MAX "
                          "active replicas (overrides --replicas)")
+    # -- telemetry export (docs/observability.md) ------------------------------
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump the final engine.stats (fleet mode: the fleet "
+                         "summary) as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the request-lifecycle span timeline as "
+                         "Chrome trace-event JSON (open in Perfetto; fleet "
+                         "mode: one track per replica engine)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -286,6 +309,12 @@ def main():
                   f"({prof['peak_reduction']:.2f}x peak reduction)")
         for rid in sorted(results)[:3]:
             print(f"  req {rid}: output shape {results[rid].shape}")
+
+    if args.trace_out:
+        n = engine.export_chrome_trace(args.trace_out)
+        print(f"chrome trace ({n} events) -> {args.trace_out}")
+    if args.stats_json:
+        dump_stats_json(args.stats_json, s)
 
 
 if __name__ == "__main__":

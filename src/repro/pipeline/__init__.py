@@ -18,13 +18,16 @@ from repro.pipeline.stage import (
     StageTask,
     effective_tier,
     mean_demand,
-    percentiles,
     split_state,
     stack_states,
     stage_unit_cost,
     state_nbytes,
     state_signature,
 )
+
+# Back-compat re-export: the percentile summary helper now lives in the
+# telemetry layer (repro.telemetry.percentiles), shared with fleet/engine.
+from repro.telemetry import percentiles
 
 __all__ = [
     "CascadePipeline",

@@ -33,11 +33,11 @@ from repro.pipeline.stage import (
     StageExecutor,
     StageTask,
     mean_demand,
-    percentiles,
     stage_unit_cost,
     state_nbytes,
     state_signature,
 )
+from repro.telemetry import SpanCollector
 
 # Modeled per-dispatch launch overhead, as a fraction of the mean stage unit
 # cost: what a stage-batch pays for compiled-graph dispatch regardless of
@@ -101,8 +101,12 @@ class CascadePipeline:
 
     def __init__(self, workload, params, *, impl: str = "auto",
                  pod_size: int = 4, queue_capacity: int = 8, seed: int = 0,
-                 stage_impl: dict | None = None, temperature: float = 0.0):
+                 stage_impl: dict | None = None, temperature: float = 0.0,
+                 spans: SpanCollector | None = None):
         self.workload = workload
+        # lifecycle span sink — the owning engine passes its collector so
+        # pipeline queue/exec/preempt spans land on the engine's timeline
+        self.spans = spans if spans is not None else SpanCollector("pipeline")
         self.params = params
         self.impl = impl
         self.pod_size = max(1, pod_size)
@@ -176,8 +180,11 @@ class CascadePipeline:
         wanted = set(rids)
         out: list[ParkedTask] = []
         for idx, buf in enumerate(self.buffers):
-            out += [ParkedTask(rid=t.rid, stage_index=idx, state=t.state)
-                    for t in buf.drain(wanted)]
+            for t in buf.drain(wanted):
+                out.append(ParkedTask(rid=t.rid, stage_index=idx,
+                                      state=t.state))
+                self.spans.instant("park", tick=self.ticks, cat="preempt",
+                                   lane=self.stages[idx].name, rid=t.rid)
         self.parked += len(out)
         return out
 
@@ -192,6 +199,9 @@ class CascadePipeline:
             self.buffers[p.stage_index].push(
                 self._task(p.rid, p.state, p.stage_index),
                 now=self.ticks, force=True)
+            self.spans.instant("resume", tick=self.ticks, cat="preempt",
+                               lane=self.stages[p.stage_index].name,
+                               rid=p.rid)
         self.resumed += len(parked)
 
     # -- scheduling ----------------------------------------------------------
@@ -210,7 +220,15 @@ class CascadePipeline:
             tasks = buf.pop_group(min(ex.max_batch, room), now=self.ticks)
             if not tasks:
                 continue
+            name = self.stages[i].name
+            for t in tasks:  # queue-wait slice: push tick -> this dispatch
+                self.spans.span("queue", cat="queue", start_tick=t.enqueued,
+                                end_tick=self.ticks, lane=name, rid=t.rid)
             new_tasks = ex.run_batch(self.params, tasks, self._key)
+            self.spans.span(name, cat="exec", start_tick=self.ticks,
+                            dur_ticks=1.0, dur_s=ex.last_service_s,
+                            lane=name, batch=len(tasks),
+                            impl=ex.effective_impl)
             executed += 1
             self.executed.append((i, len(tasks)))
             if out_buf is None:
@@ -243,6 +261,10 @@ class CascadePipeline:
         characterization reflects pipeline traffic; the event is independent
         of the ``impl`` tier, preserving the Amdahl-consistency invariant
         (naive and fallback traces stay identical)."""
+        self.spans.instant(
+            "handoff", tick=self.ticks, cat="sched",
+            lane=self.stages[stage_idx].name, n=len(tasks),
+            to=self.stages[stage_idx + 1].name)
         if not tracer.active():
             return
         payload = sum(state_nbytes(t.state) for t in tasks)
@@ -315,7 +337,7 @@ class CascadePipeline:
                 "mean_occupancy": (sum(occ) / len(occ)) if occ else 0.0,
                 "max_occupancy": max(occ) if occ else 0,
             }
-            s["queue_wait_ticks"] = percentiles(buf.waits)
+            s["queue_wait_ticks"] = buf.waits.summary()
             per_stage[ex.name] = s
             t = tiers.setdefault(ex.effective_impl,
                                  {"requested": set(), "stages": [],

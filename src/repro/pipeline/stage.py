@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.telemetry import Histogram
+
 
 # ---------------------------------------------------------------------------
 # Per-request state views
@@ -50,19 +52,6 @@ def state_nbytes(state: Any) -> int:
     """Total bytes of all arrays in a state — the latent handoff payload."""
     return int(sum(np.prod(np.shape(x)) * jnp.asarray(x).dtype.itemsize
                    for x in jax.tree.leaves(state)))
-
-
-def percentiles(xs: list) -> dict:
-    """p50/p95/mean/max summary of a latency sample (empty -> zeros)."""
-    if not xs:
-        return {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
-    arr = np.asarray(xs, np.float64)
-    return {
-        "p50": float(np.percentile(arr, 50)),
-        "p95": float(np.percentile(arr, 95)),
-        "mean": float(arr.mean()),
-        "max": float(arr.max()),
-    }
 
 
 @dataclasses.dataclass
@@ -110,18 +99,20 @@ class StageBuffer:
 
     The buffer is also the tail-latency probe: ``push(task, now=tick)``
     stamps the task, ``pop_group(..., now=tick)`` records how many ticks
-    each popped task queued, and ``waits`` accumulates the per-stage
-    queue-wait sample that :meth:`CascadePipeline.summary` reduces to
-    p50/p95.  Under continuous admission a request arriving mid-flight
-    simply lands in a partially-drained buffer via ``push`` — there is no
-    separate "late" path."""
+    each popped task queued, and ``waits`` — a streaming
+    :class:`~repro.telemetry.Histogram` at one-tick resolution — holds the
+    per-stage queue-wait sample that :meth:`CascadePipeline.summary`
+    reduces to p50/p95.  Under continuous admission a request arriving
+    mid-flight simply lands in a partially-drained buffer via ``push`` —
+    there is no separate "late" path."""
 
     def __init__(self, name: str, capacity: int | None = None):
         self.name = name
         self.capacity = capacity
         self._q: deque[StageTask] = deque()
         self.occupancy: list[int] = []  # sampled once per pipeline tick
-        self.waits: list[int] = []  # queue-wait ticks of every popped task
+        # queue-wait ticks of every popped task (streaming, 1-tick buckets)
+        self.waits = Histogram(f"{name}/queue_wait_ticks")
 
     def __len__(self) -> int:
         return len(self._q)
@@ -171,7 +162,7 @@ class StageBuffer:
             else:
                 rest.append(t)
         self._q = rest
-        self.waits += [now - t.enqueued for t in taken]
+        self.waits.observe_many(now - t.enqueued for t in taken)
         return taken
 
     def tasks(self) -> tuple[StageTask, ...]:
@@ -255,7 +246,11 @@ class StageExecutor:
         self.items = 0
         self.exec_s = 0.0
         self.batch_sizes: list[int] = []
-        self.service_s: list[float] = []  # per-batch wall time sample
+        # per-batch wall time (streaming log-bucket histogram, ~2% rel. res.)
+        self.service_s = Histogram(f"{stage.name}/service_s",
+                                   lo=1e-7, hi=1e4, resolution=0.02,
+                                   scale="log")
+        self.last_service_s = 0.0  # wall s of the most recent dispatch
 
     @property
     def name(self) -> str:
@@ -280,7 +275,8 @@ class StageExecutor:
         new = jax.block_until_ready(new)
         dt = time.perf_counter() - t0
         self.exec_s += dt
-        self.service_s.append(dt)
+        self.service_s.observe(dt)
+        self.last_service_s = dt
         self.batches += 1
         self.items += len(tasks)
         self.batch_sizes.append(len(tasks))
@@ -299,6 +295,6 @@ class StageExecutor:
             "max_batch": self.max_batch,
             "impl": self.impl,
             "effective_impl": self.effective_impl,
-            "service_s": percentiles(self.service_s),
+            "service_s": self.service_s.summary(),
             "throughput_rps": (self.items / self.exec_s) if self.exec_s else 0.0,
         }

@@ -56,12 +56,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pipeline import CascadePipeline, percentiles, resolve_stage_impls
+from repro.pipeline import CascadePipeline, resolve_stage_impls
 from repro.serving.scheduler import (
     BucketedScheduler,
     DenoisePodScheduler,
     Request,
     bucket_of,
+)
+from repro.telemetry import (
+    STATS_SCHEMA_VERSION,
+    MetricsRegistry,
+    SpanCollector,
+    write_chrome_trace,
 )
 from repro.workload import GenerativeWorkload, workload_for
 from repro.workload.base import SERVE_ROUTES
@@ -150,11 +156,21 @@ class ServeEngine:
         # same stage driver, so the overrides apply everywhere
         resolve_stage_impls(self.cost.stages, serve_cfg.impl,
                             serve_cfg.stage_impl)
-        self.stats: dict = {"requests": 0, "impl": serve_cfg.impl,
+        self.stats: dict = {"schema": STATS_SCHEMA_VERSION,
+                            "requests": 0, "impl": serve_cfg.impl,
                             "tier_throughput": {},
                             "stage_impl": dict(serve_cfg.stage_impl or {}),
                             "stages": {}}
         self.pipeline = None
+        # -- telemetry: typed metrics + lifecycle spans ----------------------
+        self.metrics = MetricsRegistry()
+        self.spans = SpanCollector(track="engine")
+        self._requests_c = self.metrics.counter(
+            "requests_submitted", "requests accepted by submit()")
+        self._completed_c = self.metrics.counter(
+            "requests_completed", "requests finished")
+        self._pending_g = self.metrics.gauge(
+            "pending_requests", "requests anywhere in the system")
         # -- online-serving clock + arrival queues ---------------------------
         self._tick = 0  # one tick == one step() call
         self._future: list = []  # heap of (arrival_tick, seq, Request)
@@ -162,10 +178,17 @@ class ServeEngine:
         self._ready_pods: deque = deque()  # pod route: admitted, unserved
         self._seq = 0
         self._arrival_tick: dict[int, int] = {}
-        self._admission_waits: list[int] = []  # arrival -> pipeline admission
-        self._e2e_ticks: list[int] = []  # arrival -> completion
+        # arrival -> admission / completion waits, streamed at 1-tick buckets
+        self._admission_waits = self.metrics.histogram(
+            "admission_wait_ticks", "arrival -> pipeline admission")
+        self._e2e_ticks = self.metrics.histogram(
+            "request_e2e_ticks", "arrival -> completion")
         self._completed = 0
-        self._busy_wall_s: list[float] = []  # per-tick wall s (work done)
+        # per-tick wall s (work done); log buckets span the JIT-compile
+        # outlier to microsecond ticks at ~2% relative resolution
+        self._busy_wall_s = self.metrics.histogram(
+            "busy_tick_s", "wall seconds of each busy tick",
+            lo=1e-7, hi=1e4, resolution=0.02, scale="log")
 
         if self.route == "cascade":
             # DenoisePodScheduler-staggered pods feed the stage pipeline:
@@ -182,6 +205,7 @@ class ServeEngine:
                 pod_size=serve_cfg.resolved_pod_size,
                 queue_capacity=serve_cfg.queue_capacity,
                 seed=serve_cfg.seed,
+                spans=self.spans,  # pipeline spans join the engine timeline
             )
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[],
                               cascade={})
@@ -216,6 +240,8 @@ class ServeEngine:
         s["exec_s"] += wall_s
         s["items"] += batch
         s["dispatches"] += 1
+        self.spans.span(name, cat="exec", start_tick=self._tick,
+                        dur_ticks=1.0, dur_s=wall_s, lane=name, batch=batch)
         legacy = {"prefill": "prefill_s", "decode": "decode_s"}
         if name in legacy and legacy[name] in self.stats:
             self.stats[legacy[name]] += wall_s
@@ -271,6 +297,7 @@ class ServeEngine:
             self._seq += 1
             heapq.heappush(self._future, (int(arrival_tick), self._seq, sreq))
         self.stats["requests"] += 1
+        self._requests_c.inc()
 
     def _enqueue(self, sreq: Request, tick: int) -> None:
         """Hand an arrived request to the route scheduler, stamped with its
@@ -333,7 +360,15 @@ class ServeEngine:
                 self.cost.step_demands(), schedule))
         self.stats["pods"] += 1
         for r in pod:
-            self._admission_waits.append(self._tick - int(r.arrived_at))
+            self._record_admission(r)
+
+    def _record_admission(self, r) -> None:
+        """Arrival -> scheduler-admission wait: histogram sample + span."""
+        arrived = int(r.arrived_at)
+        self._admission_waits.observe(self._tick - arrived)
+        self.spans.span("admission_wait", cat="admission",
+                        start_tick=arrived, end_tick=self._tick,
+                        lane="admission", rid=r.rid)
 
     # -- LM route ------------------------------------------------------------
 
@@ -369,6 +404,8 @@ class ServeEngine:
         bucket, batch = self.scheduler.next_batch()
         if not batch:
             return []
+        for r in batch:
+            self._record_admission(r)
         self.stats["padding_waste"].append(
             self.scheduler.padding_waste(batch, bucket))
         outs = self._drive(batch, bucket)
@@ -466,10 +503,10 @@ class ServeEngine:
         self.stats["cascade"]["admission"] = {
             "policy": self.serve_cfg.admission,
             "flush_wait_ticks": self.serve_cfg.arrival_flush_wait,
-            "wait_ticks": percentiles(self._admission_waits),
+            "wait_ticks": self._admission_waits.summary(),
         }
-        self.stats["cascade"]["request_latency_ticks"] = percentiles(
-            self._e2e_ticks)
+        self.stats["cascade"]["request_latency_ticks"] = (
+            self._e2e_ticks.summary())
 
     # -- unified loop --------------------------------------------------------
 
@@ -491,14 +528,19 @@ class ServeEngine:
             done = self._step_pod()
             busy = bool(done)
         if busy:  # tick->wall-clock calibration sample (busy ticks only)
-            self._busy_wall_s.append(time.perf_counter() - t0)
+            self._busy_wall_s.observe(time.perf_counter() - t0)
         self._completed += len(done)
+        self._completed_c.inc(len(done))
         for rid, _ in done:
             if rid in self._arrival_tick:
-                self._e2e_ticks.append(self._tick - self._arrival_tick[rid])
+                arrival = self._arrival_tick[rid]
+                self._e2e_ticks.observe(self._tick - arrival)
+                self.spans.span("request", cat="request", start_tick=arrival,
+                                end_tick=self._tick, lane="request", rid=rid)
             if self._closed_loop:  # one completion releases one waiter
                 self._enqueue(self._closed_loop.popleft(), self._tick)
         self._tick += 1
+        self._pending_g.set(self.pending())
         if not self.pending():
             if self.route == "cascade":
                 self._finalize_cascade_stats()
@@ -517,8 +559,8 @@ class ServeEngine:
         mean and inflate every second-denominated stat derived from it."""
         if self.serve_cfg.tick_seconds is not None:
             return float(self.serve_cfg.tick_seconds)
-        if self._busy_wall_s:
-            return float(np.median(self._busy_wall_s))
+        if self._busy_wall_s.count:
+            return self._busy_wall_s.median()
         return 0.0
 
     def _finalize_clock(self) -> None:
@@ -532,7 +574,7 @@ class ServeEngine:
             "ticks": self._tick,
             "busy_ticks": len(self._busy_wall_s),
         }
-        lat_ticks = percentiles(self._e2e_ticks)
+        lat_ticks = self._e2e_ticks.summary()
         self.stats["request_latency_ticks"] = lat_ticks
         self.stats["request_latency_s"] = {k: v * ts
                                            for k, v in lat_ticks.items()}
@@ -556,6 +598,21 @@ class ServeEngine:
             for rid, out in self.step():
                 results[rid] = out
         return results
+
+    # -- telemetry export ----------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Versioned ``MetricsRegistry.snapshot()`` of the typed metrics
+        behind ``stats`` (schema: ``repro.telemetry.schema``)."""
+        return self.metrics.snapshot()
+
+    def export_chrome_trace(self, path: str, **metadata) -> int:
+        """Write this engine's span timeline as Chrome trace-event JSON
+        (open at https://ui.perfetto.dev); returns the event count.  Tick
+        timestamps are converted to wall microseconds via the calibrated
+        :meth:`tick_seconds`."""
+        return write_chrome_trace(path, [self.spans],
+                                  self.tick_seconds() or 1.0, **metadata)
 
 
 class LMServeEngine(ServeEngine):

@@ -1,0 +1,408 @@
+"""Telemetry layer (ISSUE 8): typed metrics registry, streaming-histogram
+percentile accuracy, the versioned stats schema across all three serve
+routes + the fleet, Chrome-trace export (per-replica tracks, per-stage
+lanes, preempt/migrate/scale instants), and the bench_compare CI gate.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs.suite  # noqa: F401 — registers the paper suite
+from repro.configs import get_config
+from repro.configs.tiny import TINY_TTI_CASCADE, TINY_TTV_CASCADE
+from repro.core import tracer
+from repro.fleet import AutoscalePolicy, FleetRouter, RequestMeta
+from repro.serving import ArrivalTrace
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.telemetry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    SpanCollector,
+    chrome_trace_events,
+    json_ready,
+    percentiles,
+    validate_engine_stats,
+    validate_fleet_summary,
+    validate_snapshot,
+)
+from repro.workload import reduced_workload, workload_for
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _prompt(wl, seed=0, n=6):
+    return np.random.default_rng(seed).integers(0, wl.prompt_vocab, n)
+
+
+@pytest.fixture(scope="module")
+def pools():
+    tti = workload_for(TINY_TTI_CASCADE)
+    ttv = workload_for(TINY_TTV_CASCADE)
+    key = jax.random.PRNGKey(0)
+    return {"tti": (tti, tti.init(key)), "ttv": (ttv, ttv.init(key))}
+
+
+# ---------------------------------------------------------------------------
+# Typed metrics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotone_and_gauge_free():
+    c = Counter("reqs")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge("depth")
+    g.set(7)
+    g.dec(2)
+    assert g.value == 5
+
+
+def test_registry_create_or_get_and_type_conflict():
+    reg = MetricsRegistry()
+    c1 = reg.counter("served")
+    assert reg.counter("served") is c1  # create-or-get
+    reg.histogram("lat_ticks")
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("served")  # same name, different type
+    c1.inc(2)
+    snap = reg.snapshot()
+    validate_snapshot(snap)
+    assert snap["counters"]["served"] == 2
+    assert snap["histograms"]["lat_ticks"]["count"] == 0
+
+
+def test_histogram_matches_exact_summary_on_small_ints():
+    """On tick-valued samples inside the bucket range at resolution 1, the
+    streaming summary keys and the dense-sample case match the exact
+    helper."""
+    xs = [1, 2, 3, 4]
+    h = Histogram("t")
+    h.observe_many(xs)
+    exact = percentiles(xs)
+    assert set(h.summary()) == set(exact) == {"p50", "p95", "mean", "max"}
+    assert h.summary()["p50"] == pytest.approx(exact["p50"])
+    assert h.summary()["mean"] == exact["mean"]
+    assert h.summary()["max"] == exact["max"]
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
+    assert Histogram("e").summary() == percentiles([])
+
+
+def test_histogram_streaming_percentiles_match_numpy_property():
+    """Hypothesis property (the accuracy contract): linear-scale streaming
+    percentiles are within one bucket ``resolution`` of
+    ``numpy.percentile`` (default linear interpolation) for any sample set
+    in range — each bucket-resolved order statistic shares its true
+    sample's bucket, so the interpolated estimate inherits the bound."""
+    pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis "
+        "(requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        xs=st.lists(st.floats(min_value=0.0, max_value=4095.0,
+                              allow_nan=False), min_size=1, max_size=64),
+        q=st.sampled_from([0, 25, 50, 75, 90, 95, 99, 100]),
+    )
+    def prop(xs, q):
+        h = Histogram("p", lo=0.0, hi=4096.0, resolution=1.0)
+        h.observe_many(xs)
+        est = h.percentile(q)
+        ref = float(np.percentile(xs, q))
+        assert abs(est - ref) <= 1.0 + 1e-9
+        assert h.max == max(xs) and h.mean == pytest.approx(np.mean(xs))
+
+    prop()
+
+
+def test_histogram_log_scale_relative_accuracy_and_clamping():
+    rng = np.random.default_rng(0)
+    xs = 10.0 ** rng.uniform(-6, 2, size=200)  # 8 decades of wall-seconds
+    h = Histogram("s", lo=1e-7, hi=1e4, resolution=0.02, scale="log")
+    h.observe_many(xs)
+    for q in (50, 95):
+        ref = float(np.percentile(xs, q))
+        assert h.percentile(q) == pytest.approx(ref, rel=0.05)
+    # out-of-range samples clamp into edge buckets; extremes stay exact
+    h.observe(1e9)
+    assert h.max == 1e9
+    assert h.percentile(100) == 1e9
+    with pytest.raises(ValueError, match="lo > 0"):
+        Histogram("bad", lo=0.0, scale="log")
+
+
+# ---------------------------------------------------------------------------
+# engine.stats schema across the three serve routes
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stats_schema_pod_and_cascade_routes(pools):
+    wl, params = pools["tti"]
+    for route in ("auto", "cascade"):  # tti native route is "pod"
+        eng = ServeEngine(wl, params,
+                          ServeConfig(max_batch=2, pod_size=2, route=route,
+                                      seed=0))
+        for rid in range(3):
+            eng.submit(rid, _prompt(wl), arrival_tick=rid)
+        eng.run()
+        validate_engine_stats(eng.stats, eng.route)
+        validate_snapshot(eng.snapshot())
+        snap = eng.snapshot()
+        assert snap["counters"]["requests_completed"] == 3
+        assert snap["histograms"]["request_e2e_ticks"]["count"] == 3
+
+
+def test_engine_stats_schema_lm_route(rng_key):
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(rng_key)
+    eng = ServeEngine(wl, params, ServeConfig(max_batch=2, buckets=(8, 16)))
+    for rid in range(2):
+        eng.submit(rid, _prompt(wl), max_new_tokens=3)
+    eng.run()
+    assert eng.route == "lm"
+    validate_engine_stats(eng.stats, "lm")
+    validate_snapshot(eng.snapshot())
+
+
+def test_schema_validator_rejects_drift(pools):
+    wl, params = pools["tti"]
+    eng = ServeEngine(wl, params, ServeConfig(max_batch=2, route="cascade"))
+    eng.submit(0, _prompt(wl))
+    eng.run()
+    broken = json.loads(json.dumps(json_ready(eng.stats)))  # deep copy
+    del broken["request_latency_ticks"]
+    broken["clock"]["source"] = "guessed"
+    with pytest.raises(ValueError, match="request_latency_ticks"):
+        validate_engine_stats(broken, "cascade")
+    with pytest.raises(ValueError, match="source"):
+        validate_engine_stats(broken, "cascade")
+
+
+def test_stats_json_ready_round_trips(pools):
+    wl, params = pools["tti"]
+    eng = ServeEngine(wl, params, ServeConfig(max_batch=2, route="cascade"))
+    eng.submit(0, _prompt(wl))
+    eng.run()
+    dumped = json.dumps(json_ready(eng.stats))  # must not raise on numpy
+    assert json.loads(dumped)["schema"] == eng.stats["schema"]
+
+
+# ---------------------------------------------------------------------------
+# Span timelines + Chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def test_engine_chrome_trace_has_stage_lanes_and_lifecycle_spans(
+        pools, tmp_path):
+    wl, params = pools["tti"]
+    eng = ServeEngine(wl, params, ServeConfig(max_batch=2, route="cascade",
+                                              seed=0))
+    for rid in range(3):
+        eng.submit(rid, _prompt(wl), arrival_tick=rid)
+    eng.run()
+    out = tmp_path / "engine_trace.json"
+    n = eng.export_chrome_trace(str(out))
+    doc = json.loads(out.read_text())
+    ev = doc["traceEvents"]
+    assert len(ev) == n > 0
+    lanes = {e["args"]["name"] for e in ev
+             if e.get("ph") == "M" and e["name"] == "thread_name"}
+    stage_names = {s.name for s in wl.cost_descriptor().stages}
+    assert stage_names <= lanes  # one lane per cascade stage
+    cats = {e["cat"] for e in ev if e.get("ph") == "X"}
+    assert {"request", "admission", "queue", "exec"} <= cats
+    for e in ev:
+        if e.get("ph") == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    # exec spans carry measured wall time and share each tick proportionally
+    execs = [e for e in ev if e.get("ph") == "X" and e["cat"] == "exec"]
+    assert all("wall_s" in e["args"] for e in execs)
+
+
+def test_fleet_chrome_trace_acceptance(pools, tmp_path):
+    """The ISSUE acceptance criterion: a fleet run with preemption and
+    autoscaling exports a Chrome trace with one track per replica engine,
+    per-stage spans, and park/resume/migrate/scale instant events."""
+    fleet = FleetRouter(
+        pools, ServeConfig(max_batch=2, pod_size=2, queue_capacity=4, seed=0),
+        policy="slo", preempt=True,
+        autoscale=AutoscalePolicy(min_replicas=2, max_replicas=3,
+                                  target_queue=2.0, cooldown=1))
+    src, dst = fleet.replicas[0], fleet.replicas[1]
+    tti, ttv = pools["tti"][0], pools["ttv"][0]
+    # deterministic migration: a batch pod parks at its first stage boundary
+    # on src, interactive backlog arrives there, dst is strictly less loaded
+    for rid in (100, 101):
+        src.submit(_prompt(ttv), RequestMeta(rid=rid, pool="ttv",
+                                             tier="batch",
+                                             deadline_ticks=None, arrival=0))
+    src.engines["ttv"].step()
+    src.submit(_prompt(tti), RequestMeta(rid=0, pool="tti",
+                                         tier="interactive",
+                                         deadline_ticks=30, arrival=0))
+    fleet._migrate()
+    assert fleet.migrations == 2
+    # burst of interactive arrivals drives the autoscaler above min_replicas
+    fleet.submit_trace("tti", ArrivalTrace("burst", burst_size=8, seed=3), 8,
+                       rid_start=200, slo_tier="interactive",
+                       deadline_ticks=60)
+    fleet.run()
+    s = fleet.summary()
+    validate_fleet_summary(s)
+    assert s["autoscale"]["scale_events"], "autoscaler never fired"
+
+    out = tmp_path / "fleet_trace.json"
+    n = fleet.export_chrome_trace(str(out))
+    doc = json.loads(out.read_text())
+    ev = doc["traceEvents"]
+    assert len(ev) == n > 0
+    tracks = {e["args"]["name"] for e in ev
+              if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert "fleet" in tracks
+    for rep in range(2):  # >= min_replicas tracks, one per (replica, pool)
+        assert f"replica{rep}/tti" in tracks
+        assert f"replica{rep}/ttv" in tracks
+    instants = {e["name"] for e in ev if e.get("ph") == "i"}
+    assert {"park", "resume", "migrate", "scale"} <= instants
+    exec_lanes = {e["tid"] for e in ev
+                  if e.get("ph") == "X" and e["cat"] == "exec"}
+    assert exec_lanes  # per-stage spans present
+    # every event is Perfetto-well-formed: pid/tid ints, numeric timestamps
+    for e in ev:
+        assert isinstance(e["pid"], int)
+        if e.get("ph") in ("X", "i"):
+            assert np.isfinite(e["ts"])
+
+
+def test_fleet_clock_map_aligns_replica_spans():
+    """A collector's local->fleet clock map remaps span ticks piecewise."""
+    col = SpanCollector(track="replica0/tti")
+    col.span("request", cat="request", start_tick=0, end_tick=2,
+             lane="request", rid=1)
+    col.map_tick(0, 5)  # local tick 0 ran at fleet tick 5
+    col.map_tick(1, 9)
+    col.map_tick(2, 10)
+    assert col.to_global_tick(0) == 5
+    assert col.to_global_tick(1) == 9
+    assert col.to_global_tick(2) == 10
+    assert col.to_global_tick(3) == 11  # extrapolates past the last mapping
+    [ev] = [e for e in chrome_trace_events([col], tick_seconds=1.0)
+            if e.get("ph") == "X"]
+    assert ev["ts"] == pytest.approx(5e6)
+
+
+def test_tracer_to_chrome_trace_adapter(tmp_path):
+    """Characterization OpEvent streams export through the same viewer:
+    sequential modeled-time layout, one lane per top-level scope."""
+    with tracer.trace() as t:
+        with tracer.scope("unet"):
+            tracer.record("attention", "self_attn", flops=2e9, bytes_hbm=1e6,
+                          seq_len=256)
+            tracer.record("linear", "mlp", flops=4e9, bytes_hbm=2e6)
+        with tracer.scope("vae"):
+            tracer.record("conv", "decoder", flops=1e9, bytes_hbm=5e6)
+    out = tmp_path / "ops_trace.json"
+    events = t.to_chrome_trace(str(out))
+    slices = [e for e in events if e.get("ph") == "X"]
+    assert len(slices) == 3
+    assert all(e["dur"] > 0 for e in slices)
+    # sequential on the modeled-time axis, in call order
+    for a, b in zip(slices, slices[1:]):
+        assert b["ts"] == pytest.approx(a["ts"] + a["dur"])
+    lanes = {e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert lanes == {"unet", "vae"}
+    assert json.loads(out.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# bench_compare CI gate
+# ---------------------------------------------------------------------------
+
+
+def _bench_doc(rows):
+    return {"schema": "bench-rows/v1", "rows": rows}
+
+
+def _run_compare(tmp_path, fresh_rows, base_rows, thresholds=None):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir(exist_ok=True)
+    fresh = tmp_path / "BENCH_x.json"
+    fresh.write_text(json.dumps(_bench_doc(fresh_rows)))
+    (base_dir / "BENCH_x.json").write_text(json.dumps(_bench_doc(base_rows)))
+    if thresholds is not None:
+        (base_dir / "thresholds.json").write_text(json.dumps(thresholds))
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "bench_compare.py"),
+         str(fresh), "--baselines", str(base_dir)],
+        capture_output=True, text=True)
+    return proc
+
+
+BASE_ROW = {"bench": "bench_fleet", "name": "fleet_slo",
+            "us_per_call": 100.0, "derived": "attainment=0.95;gain=1.4x"}
+THRESH = {"us_per_call": {"max_ratio": 5.0, "min_abs_us": 200.0},
+          "metrics": {"attainment": {"direction": "higher",
+                                     "max_abs_drop": 0.05}}}
+
+
+def test_bench_compare_passes_within_thresholds(tmp_path):
+    fresh = dict(BASE_ROW, us_per_call=140.0,
+                 derived="attainment=0.93;gain=1.5x")
+    proc = _run_compare(tmp_path, [fresh], [BASE_ROW], THRESH)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_bench_compare_fails_on_synthetic_regression(tmp_path):
+    """The pinned acceptance case: a regressed BENCH file exits non-zero."""
+    fresh = dict(BASE_ROW, derived="attainment=0.50;gain=1.4x")
+    proc = _run_compare(tmp_path, [fresh], [BASE_ROW], THRESH)
+    assert proc.returncode != 0
+    assert "attainment" in proc.stdout and "regressed" in proc.stdout
+
+
+def test_bench_compare_fails_on_missing_row_and_new_error(tmp_path):
+    other = dict(BASE_ROW, name="fleet_fifo")
+    # fresh run dropped fleet_fifo entirely and errors on fleet_slo
+    fresh = dict(BASE_ROW, derived="ERROR:Boom:x", error="Boom: x")
+    proc = _run_compare(tmp_path, [fresh], [BASE_ROW, other], THRESH)
+    assert proc.returncode != 0
+    assert "missing" in proc.stdout and "ERRORS" in proc.stdout
+
+
+def test_bench_compare_guards_noisy_wall_clock(tmp_path):
+    """us_per_call fails only past BOTH the ratio and the absolute floor —
+    a 3us -> 20us jitter on a trivial bench must not fail CI."""
+    tiny_base = dict(BASE_ROW, name="tiny", us_per_call=3.0, derived="n=1")
+    tiny_fresh = dict(tiny_base, us_per_call=20.0)
+    assert _run_compare(tmp_path, [tiny_fresh], [tiny_base],
+                        THRESH).returncode == 0
+    slow_fresh = dict(BASE_ROW, us_per_call=100.0 * 8)
+    proc = _run_compare(tmp_path, [slow_fresh], [BASE_ROW], THRESH)
+    assert proc.returncode != 0 and "us_per_call" in proc.stdout
+
+
+def test_committed_baselines_match_schema():
+    """The committed baseline snapshot parses under the bench-rows schema
+    (so the CI gate always has something real to hold the lane to)."""
+    base_dir = REPO / "benchmarks" / "baselines"
+    bench_files = sorted(base_dir.glob("BENCH_*.json"))
+    assert bench_files, "no committed bench baselines"
+    for path in bench_files:
+        doc = json.loads(path.read_text())
+        assert doc["schema"] == "bench-rows/v1"
+        assert doc["rows"], f"{path.name} has no rows"
+        for row in doc["rows"]:
+            assert {"bench", "name", "us_per_call", "derived"} <= set(row)
+    assert json.loads((base_dir / "thresholds.json").read_text())

@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""CI perf-regression gate: diff fresh BENCH_*.json against committed baselines.
+
+Usage (what .github/workflows/ci.yml runs)::
+
+    python tools/bench_compare.py BENCH_kernels.json BENCH_serving.json \
+        --baselines benchmarks/baselines
+
+Each fresh file is compared against ``<baselines>/<same basename>``.  The
+gate fails (non-zero exit) when:
+
+- a row present in the baseline is missing from the fresh run (coverage
+  regression — a bench silently stopped producing results);
+- a fresh row carries an ``error`` (or an ``ERROR:`` derived string) where
+  the baseline row succeeded;
+- a numeric metric parsed from the row's ``derived`` ``key=value;...``
+  string regresses past its threshold in ``<baselines>/thresholds.json``;
+- a row's raw ``us_per_call`` blows past the noise-guarded ratio bound.
+
+Thresholds (``thresholds.json``)::
+
+    {
+      "us_per_call": {"max_ratio": 5.0, "min_abs_us": 200.0},
+      "metrics": {
+        "attainment_slo": {"direction": "higher", "max_abs_drop": 0.05},
+        "gain":           {"direction": "higher", "max_rel_drop": 0.5}
+      }
+    }
+
+``direction: "higher"`` means bigger is better (attainment, throughput
+gain); a drop beyond ``max(max_abs_drop, base * max_rel_drop)`` fails.
+``"lower"`` is the mirror for is-smaller-better metrics.  ``us_per_call``
+is wall-clock and noisy on shared CI runners, so it only fails when the
+fresh time exceeds BOTH ``base * max_ratio`` and ``base + min_abs_us`` —
+modeled/derived metrics are the precise contract, raw time the backstop.
+
+``--update`` rewrites the baselines from the fresh files instead of
+comparing (the bench-baseline workflow in ``docs/observability.md``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+
+_NUM = re.compile(r"^-?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?")
+
+DEFAULT_THRESHOLDS = {
+    "us_per_call": {"max_ratio": 5.0, "min_abs_us": 200.0},
+    "metrics": {},
+}
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """``"gain=1.43x;policy=slo;p95=12"`` -> {"gain": 1.43, "p95": 12.0}
+    (non-numeric values are skipped; unit suffixes like ``x``/``%`` are
+    stripped by numeric-prefix match)."""
+    out: dict[str, float] = {}
+    if not derived or derived.startswith("ERROR:"):
+        return out
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        m = _NUM.match(val.strip())
+        if m:
+            out[key.strip()] = float(m.group(0))
+    return out
+
+
+def load_rows(path: str) -> dict[tuple[str, str], dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "bench-rows/v1":
+        raise SystemExit(f"{path}: unknown bench schema {doc.get('schema')!r}")
+    return {(r["bench"], r["name"]): r for r in doc.get("rows", [])}
+
+
+def row_failed(row: dict) -> bool:
+    return bool(row.get("error")) or str(row.get("derived", "")).startswith("ERROR:")
+
+
+def compare_metric(name: str, base: float, fresh: float, rule: dict) -> str | None:
+    """None if within threshold, else a failure description."""
+    direction = rule.get("direction", "higher")
+    allowed = max(float(rule.get("max_abs_drop", 0.0)),
+                  abs(base) * float(rule.get("max_rel_drop", 0.0)))
+    if direction == "higher":
+        delta = base - fresh  # positive = regression
+    else:
+        delta = fresh - base
+    if delta > allowed + 1e-12:
+        arrow = f"{base:g} -> {fresh:g}"
+        return (f"metric {name!r} regressed ({direction} is better): "
+                f"{arrow}, drop {delta:g} > allowed {allowed:g}")
+    return None
+
+
+def compare_rows(key: tuple[str, str], base: dict, fresh: dict,
+                 thresholds: dict) -> list[str]:
+    where = f"{key[0]}/{key[1]}"
+    if row_failed(fresh) and not row_failed(base):
+        return [f"{where}: bench now ERRORS: {fresh.get('error') or fresh.get('derived')}"]
+    failures = []
+    base_m = parse_derived(str(base.get("derived", "")))
+    fresh_m = parse_derived(str(fresh.get("derived", "")))
+    for name, rule in thresholds.get("metrics", {}).items():
+        if name in base_m and name in fresh_m:
+            msg = compare_metric(name, base_m[name], fresh_m[name], rule)
+            if msg:
+                failures.append(f"{where}: {msg}")
+    us_rule = thresholds.get("us_per_call")
+    if us_rule:
+        b, f = float(base.get("us_per_call", 0.0)), float(fresh.get("us_per_call", 0.0))
+        if b > 0 and f > b * float(us_rule.get("max_ratio", 5.0)) \
+                and f - b > float(us_rule.get("min_abs_us", 200.0)):
+            failures.append(
+                f"{where}: us_per_call regressed {b:.1f} -> {f:.1f} "
+                f"(> {us_rule.get('max_ratio', 5.0)}x and "
+                f"+{us_rule.get('min_abs_us', 200.0)}us)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="+", metavar="BENCH.json",
+                    help="fresh bench JSON files to check")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline BENCH files")
+    ap.add_argument("--thresholds", default=None,
+                    help="thresholds JSON (default <baselines>/thresholds.json)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from the fresh files")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baselines, exist_ok=True)
+        for path in args.fresh:
+            dst = os.path.join(args.baselines, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"baseline updated: {dst}")
+        return 0
+
+    tpath = args.thresholds or os.path.join(args.baselines, "thresholds.json")
+    if os.path.exists(tpath):
+        with open(tpath) as f:
+            thresholds = json.load(f)
+    else:
+        thresholds = DEFAULT_THRESHOLDS
+        print(f"note: {tpath} not found, using default thresholds")
+
+    failures: list[str] = []
+    checked = 0
+    for path in args.fresh:
+        base_path = os.path.join(args.baselines, os.path.basename(path))
+        if not os.path.exists(base_path):
+            print(f"note: no baseline for {os.path.basename(path)} "
+                  f"({base_path} missing) — skipped; commit one via --update")
+            continue
+        base_rows = load_rows(base_path)
+        fresh_rows = load_rows(path)
+        for key, base in base_rows.items():
+            if row_failed(base):
+                continue  # baseline itself errored; nothing to hold fresh to
+            if key not in fresh_rows:
+                failures.append(
+                    f"{key[0]}/{key[1]}: present in baseline but missing "
+                    f"from fresh run (coverage regression)")
+                continue
+            checked += 1
+            failures += compare_rows(key, base, fresh_rows[key], thresholds)
+
+    if failures:
+        print(f"\nbench_compare: {len(failures)} regression(s) "
+              f"across {checked} compared row(s):")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    print(f"bench_compare: OK ({checked} rows within thresholds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -652,6 +652,90 @@ def bench_fleet() -> list:
 bench_fleet.bench_group = "serving"
 
 
+# -- sharded serving: DP scaling curve + TP-vs-replicated A/B ------------------
+
+
+def bench_sharded() -> list:
+    """Sharded multi-device serving on the host mesh: the data-parallel
+    scaling curve for the pod route (mesh ``(s, 1)``, s in {1, 2, 4, 8})
+    and a TP-vs-replicated A/B on the attention-free SR stage (mesh
+    ``(1, 2)`` under ``SERVE_TP_RULES`` channel-parallel conv).
+
+    Modeled metrics are always emitted: ``dp_modeled_gain`` is the batch-
+    partition arithmetic ``B / ceil(B / s)`` (a pod of B requests splits
+    into per-device microbatches along the ``data`` axis), ``tp_coverage``
+    is the byte fraction of params the TP rules actually shard
+    (``shard_report``).  Measured requests/s and per-stage ``exec_s`` ride
+    along only when the process has enough host devices — i.e. in the
+    host-mesh CI lane (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+    where ``BENCH_sharded.json`` is generated and gated.  ``us_per_call``
+    stays 0.0 on every row: wall-clock of fake host devices is thread-
+    scheduler noise; the modeled columns are the regression contract, the
+    measured ones the honest record."""
+    import math
+
+    from repro.configs.tiny import TINY_TTI_CASCADE
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel.sharding import SERVE_TP_RULES, shard_report
+    from repro.serving.engine import ServeConfig, ServeEngine
+    from repro.workload import workload_for
+
+    n_req = 8
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, wl.prompt_vocab, size=8) for _ in range(n_req)]
+    ndev = jax.device_count()
+
+    def serve(mesh, route="auto"):
+        eng = ServeEngine(wl, params,
+                          ServeConfig(max_batch=n_req, buckets=(8,),
+                                      route=route, mesh=mesh))
+        for rid, p in enumerate(prompts):
+            eng.submit(rid, p)
+        t0 = time.perf_counter()
+        n = len(eng.run())
+        return eng, n / (time.perf_counter() - t0)
+
+    rows, rps1 = [], None
+    for s in (1, 2, 4, 8):
+        gain = n_req / math.ceil(n_req / s)
+        derived = f"dp_modeled_gain={gain:.3f}x;pods={s};batch={n_req}"
+        if ndev >= s:
+            eng, rps = serve(make_debug_mesh(s, 1) if s > 1 else None)
+            rps1 = rps if s == 1 else rps1
+            derived += (f";measured_rps={rps:.3f}"
+                        f";measured_gain={rps / rps1:.3f}x")
+        else:
+            derived += f";measured_rps=skipped(devices={ndev}<{s})"
+        rows.append((f"sharded/{wl.cfg.name}/dp{s}x1", 0.0, derived))
+
+    # TP A/B on the SR stage: channel-parallel conv vs fully replicated.
+    if ndev >= 2:
+        mesh = make_debug_mesh(1, 2)
+        cov = shard_report(params, wl.model.specs(), mesh,
+                           SERVE_TP_RULES)["tp_coverage"]
+        eng_rep, _ = serve(None, route="cascade")
+        eng_tp, _ = serve(mesh, route="cascade")
+        rep = eng_rep.stats["cascade"]["stages"]["sr0"]["exec_s"]
+        tp = eng_tp.stats["cascade"]["stages"]["sr0"]["exec_s"]
+        rows.append((
+            f"sharded/{wl.cfg.name}/tp_sr0_1x2", 0.0,
+            f"tp_coverage={cov:.3f};sr0_exec_tp={tp:.4f}s;"
+            f"sr0_exec_replicated={rep:.4f}s;"
+            f"sr0_exec_ratio={rep / max(tp, 1e-9):.3f}x",
+        ))
+    else:
+        rows.append((
+            f"sharded/{wl.cfg.name}/tp_sr0_1x2", 0.0,
+            f"tp_coverage=skipped(devices={ndev}<2)",
+        ))
+    return rows
+
+
+bench_sharded.bench_group = "sharded"
+
+
 ALL_BENCHES = [
     bench_roofline_suite,
     bench_operator_breakdown,
@@ -667,4 +751,5 @@ ALL_BENCHES = [
     bench_online,
     bench_route_parity,
     bench_fleet,
+    bench_sharded,
 ]

@@ -49,14 +49,18 @@ class RequestMeta:
     arrival: int  # fleet tick of admission
 
 
-def normalize_pools(pools: dict) -> dict:
+def normalize_pools(pools: dict, mesh=None) -> dict:
     """``{name: (workload_or_config, params)}`` -> workload instances.
     One shared instance per pool — every replica's engine for that pool
-    reuses it (and its compiled-kernel cache)."""
+    reuses it (and its compiled-kernel cache).  With a ``mesh``, params are
+    pre-sharded once here so the replicas' engines all reuse the same
+    device-placed copy instead of re-placing it N times."""
     out = {}
     for name, (wl, params) in pools.items():
         if not isinstance(wl, GenerativeWorkload):
             wl = workload_for(wl)
+        if mesh is not None:
+            params = wl.shard_params(params, mesh)
         out[name] = (wl, params)
     return out
 
@@ -77,7 +81,8 @@ class FleetReplica:
         cfg = dataclasses.replace(serve_cfg, route="cascade")
         self.engines = {
             name: ServeEngine(wl, params, cfg)
-            for name, (wl, params) in normalize_pools(pools).items()
+            for name, (wl, params) in normalize_pools(
+                pools, mesh=cfg.mesh).items()
         }
         for name, eng in self.engines.items():
             # one Chrome-trace track per (replica, pool) engine timeline

@@ -17,13 +17,14 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
 """
 
-import os
+from repro.launch.mesh import ensure_host_device_count
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+ensure_host_device_count(512)
 
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
+import os  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 

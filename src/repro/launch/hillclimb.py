@@ -8,12 +8,13 @@ Each variant is one hypothesis->change->measure iteration; EXPERIMENTS.md
 §Perf narrates the hypotheses and verdicts against results/hillclimb.json.
 """
 
-import os
+from repro.launch.mesh import ensure_host_device_count
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+ensure_host_device_count(512)
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+import os  # noqa: E402
 import traceback  # noqa: E402
 
 from repro.launch import dryrun as dr  # noqa: E402

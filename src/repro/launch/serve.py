@@ -14,6 +14,12 @@ scheduling ticks and join partially-drained stage queues mid-flight), and
         --reduced --requests 4 --route cascade
     PYTHONPATH=src python -m repro.launch.serve --arch imagen --reduced \
         --route cascade --arrivals poisson --stage-impl sr=pallas
+
+``--mesh DxM`` serves over a ``(data, model)`` device mesh (docs/sharding.md):
+params shard once at startup under the serving TP rules, batches shard over
+``data``, and the cascade route assigns each stage a mesh slice sized from
+its HBM-demand profile.  On a CPU host, fake devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -159,6 +165,10 @@ def main():
                          "hold partial pods until arrivals fill them")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="LM sampling temperature (0 = greedy)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve over a (data, model) device mesh, e.g. 4x2: "
+                         "DP pods on the data axis, TP heavy stages on the "
+                         "model axis (docs/sharding.md)")
     ap.add_argument("--seed", type=int, default=0)
     # -- fleet serving (docs/fleet.md) ----------------------------------------
     ap.add_argument("--replicas", type=int, default=1,
@@ -190,6 +200,23 @@ def main():
                          "mode: one track per replica engine)")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh, parse_mesh
+
+        try:
+            d, m = parse_mesh(args.mesh)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        need = d * m
+        have = jax.device_count()
+        if have < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices but only {have} "
+                f"visible; on a CPU host export "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+        mesh = make_debug_mesh(d, m)
+
     cfg = get_config(args.arch)
     workload = (reduced_workload(cfg) if args.reduced else workload_for(cfg))
     cfg = workload.cfg
@@ -203,12 +230,19 @@ def main():
                             admission=args.admission,
                             temperature=args.temperature,
                             tick_seconds=args.tick_seconds,
-                            seed=args.seed)
+                            seed=args.seed, mesh=mesh)
     engine = None if fleet_mode else ServeEngine(workload, params, serve_cfg)
     cd = workload.cost_descriptor()
     route = "cascade" if fleet_mode else engine.route
     print(f"arch {cfg.name} | route {route} | stages "
           + " -> ".join(f"{s.name}x{s.steps}" for s in cd.stages))
+    if engine is not None and mesh is not None:
+        ms = engine.stats["mesh"]
+        print(f"mesh {ms['axes']} ({ms['devices']} devices) | TP coverage "
+              f"{ms['params']['tp_coverage']:.1%} "
+              f"({ms['params']['sharded_bytes']}/{ms['params']['total_bytes']}"
+              f" bytes sharded, {ms['params']['replication_fallbacks']:.0f} "
+              f"replication fallbacks)")
 
     if args.arrival_rps is not None:
         if args.tick_seconds is None:
@@ -264,6 +298,11 @@ def main():
         c = s["cascade"]
         print(f"  pipeline: {c['ticks']} ticks, stage concurrency max "
               f"{c['concurrency']['max']} mean {c['concurrency']['mean']:.2f}")
+        if "mesh" in c:
+            cm = c["mesh"]
+            sd = ", ".join(f"{n}={k}" for n, k in cm["stage_devices"].items())
+            print(f"  stage meshes: {sd} | {cm['reshard_events']} reshards, "
+                  f"{cm['reshard_bytes']} bytes moved")
         adm = c["admission"]
         print(f"  admission [{adm['policy']}]: wait ticks p50 "
               f"{adm['wait_ticks']['p50']:.0f} p95 "

@@ -173,7 +173,11 @@ class DiffusionPipeline(Module):
         stages resume a partially-denoised latent)."""
 
         def unet_eps(z, t_scalar):
-            inp = z if cond is None else jnp.concatenate([z, cond], axis=-1)
+            # channel concat pinned unsharded: conv-channel TP may shard
+            # cond/z channels, and XLA miscompiles concat on a sharded axis
+            from repro.parallel.sharding import concat_unsharded
+
+            inp = z if cond is None else concat_unsharded([z, cond], axis=-1)
             return unet(params_unet, inp,
                         jnp.full((z.shape[0],), t_scalar, jnp.float32), ctx,
                         impl=impl)

@@ -103,7 +103,7 @@ class MoE(Module):
         keep = pos_sel < capacity
         dest = jnp.where(keep, eid * capacity + pos_sel, E * capacity)
 
-        from repro.parallel.sharding import constrain
+        from repro.parallel.sharding import concat_unsharded, constrain
 
         x_rep = jnp.repeat(xt, k, axis=0)  # (T*k, d)
         # token-major tensors stay batch-sharded: the scatter to the
@@ -126,7 +126,10 @@ class MoE(Module):
         expert_out = constrain(expert_out, ("model", None, None))
 
         # ---- combine ----
-        out_flat = jnp.concatenate(
+        # concat_unsharded: the reshape folds the EP-sharded expert axis
+        # into dim 0, and XLA miscompiles concatenate along a sharded axis;
+        # the combine-side all-gather this pins is standard EP anyway.
+        out_flat = concat_unsharded(
             [expert_out.reshape(E * capacity, d), jnp.zeros((1, d), x.dtype)], axis=0
         )
         gathered = out_flat[dest]  # (T*k, d); dropped tokens -> zeros row

@@ -411,10 +411,16 @@ class UNet2D(Module):
                         skips[-1] = h  # attn refines the last skip
         for bi, (kind, ci, co) in enumerate(plan["mid"]):
             h = run_block(f"mid_{bi}_{kind}", kind, ci, co, h)
+        # Skip concat goes through concat_unsharded: under conv-channel TP
+        # the skip tensor arrives model-sharded on channels, and XLA's CPU
+        # backend miscompiles concatenate along a sharded axis (silently
+        # wrong values).  See repro.parallel.sharding.concat_unsharded.
+        from repro.parallel.sharding import concat_unsharded
+
         for si, blocks in enumerate(plan["up"]):
             for bi, (kind, ci, co) in enumerate(blocks):
                 if kind == "res":
-                    h = jnp.concatenate([h, skips.pop()], axis=-1)
+                    h = concat_unsharded([h, skips.pop()], axis=-1)
                 h = run_block(f"up_{si}_{bi}_{kind}", kind, ci, co, h)
 
         conv_out = Conv2D(cfg.model_channels, cfg.out_channels, 3,

@@ -1,15 +1,23 @@
 from repro.parallel.sharding import (
     DEFAULT_RULES,
+    REPLICATION_FALLBACKS,
+    SERVE_TP_RULES,
     batch_axes,
+    concat_unsharded,
     logical_to_sharding,
     shard_params_tree,
+    shard_report,
     spec_for,
 )
 
 __all__ = [
     "DEFAULT_RULES",
+    "REPLICATION_FALLBACKS",
+    "SERVE_TP_RULES",
     "batch_axes",
+    "concat_unsharded",
     "logical_to_sharding",
     "shard_params_tree",
+    "shard_report",
     "spec_for",
 ]

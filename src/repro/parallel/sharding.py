@@ -23,10 +23,14 @@ valid across all ten architectures.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.telemetry import Counter
 
 # logical axis -> preferred mesh axis (None = replicate)
 DEFAULT_RULES: dict[str, Any] = {
@@ -68,11 +72,30 @@ SERVE_RULES: dict[str, Any] = {
     "embed": None,
 }
 
+# Serving TP for conv-dominated stages: the paper's Fig.7 puts Conv at up to
+# 44% of Diffusion-TTI time, and the reduced SR UNets are attention-free
+# (attn_levels=()), so head/mlp TP alone leaves them fully replicated.
+# Channel-parallel conv (shard "conv_out" over model) is the classic
+# Megatron-style split for UNets: each shard computes a channel slice and
+# the following layer consumes it replicated.
+SERVE_TP_RULES: dict[str, Any] = {
+    **SERVE_RULES,
+    "conv_out": "model",
+}
+
 PROFILES = {
     "2d": {"rules": DEFAULT_RULES, "batch": ("pod", "data")},
     "fsdp": {"rules": FSDP_RULES, "batch": ("pod", "data", "model")},
     "serve": {"rules": SERVE_RULES, "batch": ("pod", "data")},
 }
+
+# Telemetry for the divisibility fallback below: silent replication is the
+# classic TP foot-gun (a mis-sized mesh quietly serves fully replicated).
+REPLICATION_FALLBACKS = Counter(
+    "sharding_replication_fallbacks",
+    "param dims that fell back to replication (dim % axis_size != 0)",
+)
+_warned_fallbacks: set = set()
 
 _current_profile = "2d"
 
@@ -131,7 +154,18 @@ def spec_for(
             out.append(None)
             continue
         if dim % _axis_size(mesh, axis) != 0:
-            out.append(None)  # e.g. kv_heads=8 on model=16
+            # e.g. kv_heads=8 on model=16 — legal, but must not be silent.
+            REPLICATION_FALLBACKS.inc()
+            sig = (name, dim, axis, _axis_size(mesh, axis))
+            if sig not in _warned_fallbacks:
+                _warned_fallbacks.add(sig)
+                warnings.warn(
+                    f"sharding: logical axis {name!r} (dim={dim}) does not "
+                    f"divide mesh axis {axis!r} (size={sig[3]}); replicating. "
+                    "Check engine.stats['mesh']['params'] for TP coverage.",
+                    stacklevel=2,
+                )
+            out.append(None)
             continue
         out.append(axis)
         used.update(axes)
@@ -157,6 +191,33 @@ def shard_params_tree(params, specs_tree, mesh: Mesh, rules=None):
     """Device-put a concrete params pytree according to the rules."""
     shardings = logical_to_sharding(specs_tree, params, mesh, rules)
     return jax.tree.map(jax.device_put, params, shardings)
+
+
+def shard_report(params, specs_tree, mesh: Mesh, rules=None) -> dict:
+    """Sharded-vs-replicated byte accounting ("TP coverage") for a params
+    tree under the given rules — surfaced in ``engine.stats["mesh"]`` so a
+    mesh that silently replicates everything is visible, not a mystery OOM.
+    """
+    shardings = logical_to_sharding(specs_tree, params, mesh, rules)
+    sharded = 0
+    replicated_b = 0
+
+    def one(x, s):
+        nonlocal sharded, replicated_b
+        nbytes = int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+        if any(p is not None for p in s.spec):
+            sharded += nbytes
+        else:
+            replicated_b += nbytes
+
+    jax.tree.map(one, params, shardings)
+    total = sharded + replicated_b
+    return {
+        "sharded_bytes": sharded,
+        "replicated_bytes": replicated_b,
+        "total_bytes": total,
+        "tp_coverage": (sharded / total) if total else 0.0,
+    }
 
 
 def constrain(x, spec_names: tuple):
@@ -199,6 +260,34 @@ def constrain(x, spec_names: tuple):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(env_mesh, P(*parts))
     )
+
+
+def concat_unsharded(xs, axis: int = -1):
+    """``jnp.concatenate`` with the concatenated axis pinned unsharded.
+
+    XLA's CPU backend miscompiles ``concatenate`` along a *sharded*
+    dimension: silently wrong values, eager and jitted alike, even when
+    every operand carries the identical sharding (verified on a 4x2 host
+    mesh).  Concats along unsharded axes are unaffected, as are adds and
+    reshapes.  Every model-code concat on a dimension the TP rules may
+    shard (conv channels, the expert-major MoE combine buffer) must route
+    through here: dim 0 keeps its data-parallel batch axes, every other
+    dim — in particular the concat axis — is pinned replicated.  The
+    OUTPUT is pinned too: under jit the partitioner propagates a sharded
+    layout backward onto the concat from downstream sharded-weight ops,
+    and a concat whose result is sharded miscompiles even with replicated
+    operands.  Downstream matmuls/convs re-shard via their weight
+    shardings, so the only cost is one all-gather at the seam.  No-op
+    outside a mesh context.
+    """
+    import jax.numpy as jnp
+
+    xs = list(xs)
+    nd = xs[0].ndim
+    ax = axis % nd
+    spec = tuple("batch" if (i == 0 and ax != 0) else None for i in range(nd))
+    out = jnp.concatenate([constrain(x, spec) for x in xs], axis=axis)
+    return constrain(out, spec)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

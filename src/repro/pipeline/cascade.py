@@ -102,7 +102,7 @@ class CascadePipeline:
     def __init__(self, workload, params, *, impl: str = "auto",
                  pod_size: int = 4, queue_capacity: int = 8, seed: int = 0,
                  stage_impl: dict | None = None, temperature: float = 0.0,
-                 spans: SpanCollector | None = None):
+                 spans: SpanCollector | None = None, mesh=None):
         self.workload = workload
         # lifecycle span sink — the owning engine passes its collector so
         # pipeline queue/exec/preempt spans land on the engine's timeline
@@ -117,9 +117,26 @@ class CascadePipeline:
         batches = stage_batch_sizes(self.stages, self.pod_size,
                                     self.queue_capacity)
         impls = resolve_stage_impls(self.stages, impl, stage_impl)
+        # per-stage device assignment: carve the mesh into one slice per
+        # stage sized from its HBM-demand profile (text-encode on a sliver
+        # while SR saturates the rest).  jit requires params and state on
+        # one device set, so each stage's weights live on its own slice.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.parallel.mesh_exec import stage_mesh_slices
+
+            self.stage_meshes = stage_mesh_slices(self.stages, mesh)
+            self.stage_params = [workload.shard_params(params, m)
+                                 for m in self.stage_meshes]
+        else:
+            self.stage_meshes = [None] * len(self.stages)
+            self.stage_params = [params] * len(self.stages)
+        self.reshard_events = 0  # cross-slice latent handoffs
+        self.reshard_bytes = 0
         self.executors = [
             StageExecutor(workload, s, impl=im, max_batch=b,
-                          temperature=temperature, stage_index=i)
+                          temperature=temperature, stage_index=i,
+                          mesh=self.stage_meshes[i])
             for i, (s, b, im) in enumerate(zip(self.stages, batches, impls))
         ]
         # buffers[i] feeds stage i; buffers[0] is the (unbounded) admission
@@ -224,7 +241,7 @@ class CascadePipeline:
             for t in tasks:  # queue-wait slice: push tick -> this dispatch
                 self.spans.span("queue", cat="queue", start_tick=t.enqueued,
                                 end_tick=self.ticks, lane=name, rid=t.rid)
-            new_tasks = ex.run_batch(self.params, tasks, self._key)
+            new_tasks = ex.run_batch(self.stage_params[i], tasks, self._key)
             self.spans.span(name, cat="exec", start_tick=self.ticks,
                             dur_ticks=1.0, dur_s=ex.last_service_s,
                             lane=name, batch=len(tasks),
@@ -265,6 +282,7 @@ class CascadePipeline:
             "handoff", tick=self.ticks, cat="sched",
             lane=self.stages[stage_idx].name, n=len(tasks),
             to=self.stages[stage_idx + 1].name)
+        self._reshard(stage_idx, tasks)
         if not tracer.active():
             return
         payload = sum(state_nbytes(t.state) for t in tasks)
@@ -275,6 +293,34 @@ class CascadePipeline:
             flops=0.0, bytes_hbm=2.0 * payload,
             batch=len(tasks), stage=self.stages[stage_idx].name,
         )
+
+    def _reshard(self, stage_idx: int, tasks: list[StageTask]) -> None:
+        """Move latents whose next stage runs on a different device slice:
+        ``device_put`` each task's state onto the consumer's slice and count
+        the traffic honestly — cross-slice handoffs are the cost per-stage
+        device assignment pays for the HBM-fit win."""
+        cur = self.stage_meshes[stage_idx]
+        nxt = self.stage_meshes[stage_idx + 1]
+        if cur is None or nxt is None:
+            return
+        if set(cur.devices.flat) == set(nxt.devices.flat):
+            return
+        from repro.parallel.sharding import replicated
+
+        payload = sum(state_nbytes(t.state) for t in tasks)
+        sh = replicated(nxt)
+        for t in tasks:
+            t.state = jax.device_put(t.state, sh)
+        self.reshard_events += 1
+        self.reshard_bytes += payload
+        if tracer.active():
+            tracer.record(
+                "other",
+                f"reshard/{self.stages[stage_idx].name}->"
+                f"{self.stages[stage_idx + 1].name}",
+                flops=0.0, bytes_hbm=float(payload),
+                batch=len(tasks), stage=self.stages[stage_idx].name,
+            )
 
     # -- reporting -----------------------------------------------------------
 
@@ -350,6 +396,18 @@ class CascadePipeline:
             t["requested"] = sorted(t["requested"])
             t["rps"] = (t["items"] / t["exec_s"]) if t["exec_s"] else 0.0
         conc = self.concurrency
+        mesh_report = None
+        if self.mesh is not None:
+            mesh_report = {
+                "axes": {k: int(v) for k, v in self.mesh.shape.items()},
+                "devices": int(self.mesh.devices.size),
+                "stage_devices": {
+                    s.name: int(m.devices.size)
+                    for s, m in zip(self.stages, self.stage_meshes)
+                },
+                "reshard_events": int(self.reshard_events),
+                "reshard_bytes": int(self.reshard_bytes),
+            }
         return {
             "stages": per_stage,
             "tiers": tiers,
@@ -363,4 +421,5 @@ class CascadePipeline:
                 "mean": (sum(conc) / len(conc)) if conc else 0.0,
             },
             "hbm": self.modeled_comparison(),
+            **({"mesh": mesh_report} if mesh_report is not None else {}),
         }

@@ -233,7 +233,7 @@ class StageExecutor:
 
     def __init__(self, workload, stage, *, impl: str = "auto",
                  max_batch: int = 4, temperature: float = 0.0,
-                 stage_index: int = 0):
+                 stage_index: int = 0, mesh=None):
         self.workload = workload
         self.stage = stage
         self.stage_index = stage_index
@@ -241,6 +241,7 @@ class StageExecutor:
         self.effective_impl = effective_tier(impl)
         self.max_batch = max_batch
         self.temperature = temperature
+        self.mesh = mesh  # optional per-stage device slice (see cascade.py)
         # -- stats ----------------------------------------------------------
         self.batches = 0
         self.items = 0
@@ -267,11 +268,14 @@ class StageExecutor:
 
         batched = stack_states([t.state for t in tasks])
         keys = stage_keys(key, [t.rid for t in tasks], self.stage_index)
+        # forwarded only when set, so mesh-free run_stage doubles keep working
+        mesh_kw = {} if self.mesh is None else {"mesh": self.mesh}
         t0 = time.perf_counter()
         with tracer.scope(self.stage.name):
             new = self.workload.run_stage(params, self.stage, batched, keys,
                                           impl=self.effective_impl,
-                                          temperature=self.temperature)
+                                          temperature=self.temperature,
+                                          **mesh_kw)
         new = jax.block_until_ready(new)
         dt = time.perf_counter() - t0
         self.exec_s += dt
@@ -287,7 +291,7 @@ class StageExecutor:
     def summary(self) -> dict:
         """Per-stage serving report: batch counts, tiers, throughput, and
         the p50/p95 per-batch service-time sample."""
-        return {
+        out = {
             "batches": self.batches,
             "items": self.items,
             "exec_s": self.exec_s,
@@ -298,3 +302,7 @@ class StageExecutor:
             "service_s": self.service_s.summary(),
             "throughput_rps": (self.items / self.exec_s) if self.exec_s else 0.0,
         }
+        if self.mesh is not None:
+            out["mesh"] = {"axes": dict(self.mesh.shape),
+                           "devices": int(self.mesh.devices.size)}
+        return out

@@ -95,7 +95,17 @@ class ServeConfig:
     ``None`` auto-calibrates from the measured median busy-tick service
     time (median: robust to the JIT-compile outlier on first-shape ticks),
     so arrival rates and tail latencies can be stated in requests/second
-    and seconds (``engine.stats["clock"]``)."""
+    and seconds (``engine.stats["clock"]``).
+
+    ``mesh`` (optional ``jax.sharding.Mesh`` with ``data``/``model`` axes,
+    e.g. from ``repro.launch.mesh.make_debug_mesh``) turns on sharded
+    serving: params are TP-sharded once at engine construction, every
+    stage dispatch runs data-parallel over the batch, and the cascade
+    route additionally carves the mesh into per-stage device slices.
+    ``stats["mesh"]`` reports the axes plus sharded-vs-replicated param
+    bytes ("TP coverage").  Outputs stay bit-equivalent to single-device
+    serving under the ``stage_key`` PRNG contract (up to XLA accumulation
+    order; pinned in ``tests/test_route_parity.py``)."""
 
     max_batch: int = 4
     max_len: int = 256
@@ -110,6 +120,7 @@ class ServeConfig:
     admission: str = "continuous"  # "continuous" | "pod" (online pod flush)
     arrival_flush_wait: int = 2  # ticks a partial pod waits before flushing
     tick_seconds: float | None = None  # None -> calibrate from measurement
+    mesh: Any = None  # optional jax Mesh ("data"/"model") -> sharded serving
 
     @property
     def resolved_pod_size(self) -> int:
@@ -140,6 +151,22 @@ class ServeEngine:
         self.workload = workload
         self.cfg = workload.cfg
         self.model = workload.model
+        # -- sharded serving: place params on the mesh ONCE, here ------------
+        self.mesh = serve_cfg.mesh
+        self._mesh_report = None
+        if self.mesh is not None:
+            from repro.parallel.sharding import (
+                REPLICATION_FALLBACKS,
+                SERVE_TP_RULES,
+                shard_report,
+            )
+
+            before = REPLICATION_FALLBACKS.value
+            params = workload.shard_params(params, self.mesh)
+            self._mesh_report = shard_report(
+                params, workload.model.specs(), self.mesh, SERVE_TP_RULES)
+            self._mesh_report["replication_fallbacks"] = (
+                REPLICATION_FALLBACKS.value - before)
         self.params = params
         self.serve_cfg = serve_cfg
         self.cost = workload.cost_descriptor()
@@ -164,6 +191,16 @@ class ServeEngine:
         self.pipeline = None
         # -- telemetry: typed metrics + lifecycle spans ----------------------
         self.metrics = MetricsRegistry()
+        if self.mesh is not None:
+            self.stats["mesh"] = {
+                "axes": {k: int(v) for k, v in self.mesh.shape.items()},
+                "devices": int(self.mesh.devices.size),
+                "params": self._mesh_report,
+            }
+            self.metrics.counter(
+                "sharding_replication_fallbacks",
+                "param dims replicated by the divisibility fallback",
+            ).inc(self._mesh_report["replication_fallbacks"])
         self.spans = SpanCollector(track="engine")
         self._requests_c = self.metrics.counter(
             "requests_submitted", "requests accepted by submit()")
@@ -206,6 +243,7 @@ class ServeEngine:
                 queue_capacity=serve_cfg.queue_capacity,
                 seed=serve_cfg.seed,
                 spans=self.spans,  # pipeline spans join the engine timeline
+                mesh=self.mesh,  # per-stage device slices (see cascade.py)
             )
             self.stats.update(generate_s=0.0, pods=0, bandwidth_profile=[],
                               cascade={})
@@ -386,6 +424,8 @@ class ServeEngine:
         ``ServeConfig.stage_impl`` per-stage tier overrides and per-stage
         time attribution (``stats["stages"]``) applied on every route."""
         toks = self._pad_prompts(requests, width)
+        # mesh forwarded only when set (mesh-free driver doubles keep working)
+        mesh_kw = {} if self.mesh is None else {"mesh": self.mesh}
         return self.workload.generate_requests(
             self.params, toks, jax.random.PRNGKey(self.serve_cfg.seed),
             impl=self.serve_cfg.impl,
@@ -393,7 +433,7 @@ class ServeEngine:
             temperature=self.serve_cfg.temperature,
             max_new_tokens=[r.max_new_tokens for r in requests],
             rids=[r.rid for r in requests],
-            on_stage=self._record_stage)
+            on_stage=self._record_stage, **mesh_kw)
 
     def _step_lm(self) -> list[tuple[int, Any]]:
         """Serve one bucketed batch through the stage driver — the same

@@ -181,7 +181,30 @@ def validate_engine_stats(stats: dict, route: str) -> None:
         c.check(False, f"unknown route {route!r}")
     if "fleet" in stats:
         _validate_fleet(c, stats["fleet"], "stats.fleet")
+    if "mesh" in stats:  # optional: present iff serving over a device mesh
+        _validate_mesh(c, stats["mesh"], "stats.mesh")
     c.raise_if_failed(f"engine.stats (route={route!r})")
+
+
+def _validate_mesh(c: _Ctx, m: dict, path: str) -> None:
+    """Mesh block of ``engine.stats`` (docs/sharding.md): mesh geometry plus
+    the sharded-vs-replicated param-bytes ("TP coverage") report."""
+    if not c.check(isinstance(m, dict), f"{path}: expected dict"):
+        return
+    if c.check(isinstance(m.get("axes"), dict), f"{path}.axes: expected dict"):
+        for name, size in m["axes"].items():
+            c.check(isinstance(size, int) and size >= 1,
+                    f"{path}.axes[{name}]: expected int >= 1, got {size!r}")
+    c.num(m, "devices", path, minimum=1)
+    if c.check(isinstance(m.get("params"), dict), f"{path}.params: expected dict"):
+        p = m["params"]
+        pp = f"{path}.params"
+        for k in ("sharded_bytes", "replicated_bytes", "total_bytes",
+                  "replication_fallbacks"):
+            c.num(p, k, pp, minimum=0)
+        c.num(p, "tp_coverage", pp, minimum=0.0)
+        c.check(float(p.get("tp_coverage", 0.0)) <= 1.0,
+                f"{pp}.tp_coverage: expected <= 1.0")
 
 
 def _validate_fleet(c: _Ctx, s: dict, path: str = "fleet") -> None:

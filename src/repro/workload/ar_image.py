@@ -67,7 +67,13 @@ class ARImageWorkload(GenerativeWorkload):
         )
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
-                  temperature: float = 0.0):
+                  temperature: float = 0.0, mesh=None):
+        if mesh is not None:
+            from repro.parallel.mesh_exec import run_stage_on_mesh
+
+            return run_stage_on_mesh(self, params, stage, state, key,
+                                     impl=impl, temperature=temperature,
+                                     mesh=mesh)
         del key, temperature  # greedy/confidence decode rules: deterministic
         model = self.model
         if stage.name == "text_encoder":

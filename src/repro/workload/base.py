@@ -237,8 +237,25 @@ class GenerativeWorkload:
     def build_model(self, cfg):
         raise NotImplementedError
 
-    def init(self, key):
-        return self.model.init(key)
+    def init(self, key, mesh=None):
+        """Materialize parameters; with a ``mesh``, shard them once here via
+        ``shard_params_tree`` (serving rules) — the single sharding point of
+        the serving path."""
+        params = self.model.init(key)
+        if mesh is not None:
+            params = self.shard_params(params, mesh)
+        return params
+
+    def shard_params(self, params, mesh):
+        """Place a params tree on ``mesh`` under the serving TP rules
+        (weights replicated over ``data``, TP-sharded over ``model``,
+        channel-parallel conv for the attention-free SR UNets).  Dims that
+        don't divide their axis replicate — with a warning and a telemetry
+        count (see ``parallel.sharding.REPLICATION_FALLBACKS``)."""
+        from repro.parallel.sharding import SERVE_TP_RULES, shard_params_tree
+
+        return shard_params_tree(params, self.model.specs(), mesh,
+                                 SERVE_TP_RULES)
 
     def reduced(self):
         """Tiny same-structure config for CPU execution/benchmarks."""
@@ -277,7 +294,8 @@ class GenerativeWorkload:
 
     def generate(self, params, tokens, key, *, impl="auto",
                  max_new_tokens: int = 0, temperature: float = 0.0,
-                 rids=None, stage_impl: dict | None = None, on_stage=None):
+                 rids=None, stage_impl: dict | None = None, on_stage=None,
+                 mesh=None):
         """Batched full-pipeline inference: (B, S) tokens -> stacked output.
 
         This is THE canonical stage composition: ``init_stage_state`` per
@@ -296,18 +314,21 @@ class GenerativeWorkload:
         overrides the kernel tier per stage (exact name or prefix, same
         semantics as ``ServeConfig.stage_impl``); ``on_stage(name, wall_s,
         batch)`` is an optional per-dispatch callback the engine uses for
-        per-stage time attribution."""
+        per-stage time attribution; ``mesh`` (optional ``jax.sharding.Mesh``
+        with ``data``/``model`` axes) runs every stage data-parallel over
+        the batch with TP-sharded params — outputs stay mesh-invariant
+        under the PRNG contract (see ``parallel.mesh_exec``)."""
         import jax.numpy as jnp
 
         return jnp.stack(self.generate_requests(
             params, tokens, key, impl=impl, max_new_tokens=max_new_tokens,
             temperature=temperature, rids=rids, stage_impl=stage_impl,
-            on_stage=on_stage))
+            on_stage=on_stage, mesh=mesh))
 
     def generate_requests(self, params, tokens, key, *, impl="auto",
                           max_new_tokens=0, temperature: float = 0.0,
                           rids=None, stage_impl: dict | None = None,
-                          on_stage=None) -> list:
+                          on_stage=None, mesh=None) -> list:
         """The :meth:`generate` driver, returning per-request outputs as a
         list (what the serving routes consume — per-request outputs may
         differ in length, so ``max_new_tokens`` may also be a per-request
@@ -328,13 +349,16 @@ class GenerativeWorkload:
             self.init_stage_state(tokens[i], max_new_tokens=mnt[i])
             for i in range(B)
         ])
+        # mesh is forwarded only when set so that run_stage doubles (test
+        # spies, minimal subclasses) keep their mesh-free signature working.
+        mesh_kw = {} if mesh is None else {"mesh": mesh}
         for idx, stage in enumerate(stages):
             keys = stage_keys(key, rids, idx)
             t0 = time.perf_counter()
             with tracer.scope(stage.name):
                 state = self.run_stage(
                     params, stage, state, keys,
-                    impl=impls[idx], temperature=temperature)
+                    impl=impls[idx], temperature=temperature, **mesh_kw)
             if on_stage is not None:
                 on_stage(stage.name, time.perf_counter() - t0, B)
         return [self.stage_output(s) for s in split_state(state, B)]
@@ -380,10 +404,18 @@ class GenerativeWorkload:
         return {"tokens": jnp.asarray(tokens, jnp.int32)}
 
     def run_stage(self, params, stage: Stage, state: dict, key, *,
-                  impl="auto", temperature: float = 0.0) -> dict:
+                  impl="auto", temperature: float = 0.0,
+                  mesh=None) -> dict:
         """Execute one descriptor ``stage`` over batched ``state`` -> new
         batched state.  The final stage must store the result under
         ``"out"`` (or override ``stage_output``).
+
+        ``mesh`` (optional) requests mesh-aware execution: implementations
+        delegate to :func:`repro.parallel.mesh_exec.run_stage_on_mesh`,
+        which shards the batch over the mesh's data axes and re-enters the
+        same body under ``with mesh:`` (so TP activation constraints
+        apply).  Drivers only pass the kwarg when a mesh is set, keeping
+        mesh-free ``run_stage`` doubles valid.
 
         ``key`` is the stacked ``(B, ...)`` per-request key batch from
         :func:`stage_keys` — one key per request, folded on

@@ -97,9 +97,15 @@ class DiffusionWorkload(GenerativeWorkload):
                               stages=tuple(stages))
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
-                  temperature: float = 0.0):
+                  temperature: float = 0.0, mesh=None):
         import jax
 
+        if mesh is not None:
+            from repro.parallel.mesh_exec import run_stage_on_mesh
+
+            return run_stage_on_mesh(self, params, stage, state, key,
+                                     impl=impl, temperature=temperature,
+                                     mesh=mesh)
         del temperature  # DDIM sampling has no temperature knob
         model, cfg = self.model, self.cfg
         if stage.name == "text_encoder":

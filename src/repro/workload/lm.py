@@ -91,11 +91,17 @@ class LMWorkload(GenerativeWorkload):
         return jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)
 
     def run_stage(self, params, stage, state, key, *, impl="auto",
-                  temperature: float = 0.0):
+                  temperature: float = 0.0, mesh=None):
         """Prefill/decode stages — the single decode loop every serve route
         runs (the lm route's ``_step_lm`` drives it through ``generate``),
         so ``ServeConfig.temperature`` sampling lives in exactly one
         place."""
+        if mesh is not None:
+            from repro.parallel.mesh_exec import run_stage_on_mesh
+
+            return run_stage_on_mesh(self, params, stage, state, key,
+                                     impl=impl, temperature=temperature,
+                                     mesh=mesh)
         model = self.model
         if stage.name == "prefill":
             toks = state["tokens"]  # (B, S) bucket-padded

@@ -279,3 +279,107 @@ def test_stage_keys_prng_fold_property():
         assert np.array_equal(batch[-1], k)
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# Mesh parity (ISSUE 10): sharded serving composes with route invariance.
+# Gated on the host-mesh CI lane's 8 fake devices.
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+# fp32 accumulation-order tolerance for TP meshes, relative to output scale.
+# Measured mesh-vs-single-device deviation is ~4e-7 of scale (pure reduction
+# reordering); real sharding corruption (the concatenate miscompile this PR
+# worked around) lands at ~0.5x scale, 5 orders of magnitude above the pin.
+MESH_RTOL = 1e-5
+
+
+def _mesh_cases():
+    from repro.launch.mesh import make_debug_mesh
+
+    # (8,1): pure DP — bit-identical (no TP reductions are reordered).
+    # (4,2): DP x TP with a batch that does NOT divide the data axis — the
+    # regime that exposed the sharded-axis concatenate miscompile.
+    return [("dp8x1", make_debug_mesh(8, 1), 0.0),
+            ("tp4x2", make_debug_mesh(4, 2), MESH_RTOL)]
+
+
+@needs_mesh
+def test_diffusion_mesh_parity_vs_single_device(rng_key):
+    """TTI cascade on a host mesh == single device: bit-identical under
+    pure DP, pinned fp-accumulation tolerance under TP."""
+    wl = workload_for(TINY_TTI_CASCADE)
+    params = wl.init(rng_key)
+    prompts = np.stack(_prompts(wl, n=N_REQ))
+    ref = np.asarray(wl.generate(params, prompts, key=jax.random.PRNGKey(0)))
+    scale = float(np.max(np.abs(ref)))
+    for name, mesh, rtol in _mesh_cases():
+        ps = wl.shard_params(params, mesh)
+        out = np.asarray(wl.generate(ps, prompts, key=jax.random.PRNGKey(0),
+                                     mesh=mesh))
+        d = float(np.max(np.abs(ref - out)))
+        assert d <= rtol * scale, f"{name}: maxdiff {d} > {rtol * scale}"
+
+
+@needs_mesh
+def test_lm_mesh_parity_greedy_tokens_exact(rng_key):
+    """LM greedy decode on a host mesh: argmax tokens are EXACTLY the
+    single-device tokens on every mesh shape — integer outputs leave no
+    room for tolerance."""
+    wl = reduced_workload(get_config("olmo-1b"))
+    params = wl.init(rng_key)
+    prompts = np.stack(_prompts(wl, n=N_REQ))
+    rids = list(range(N_REQ))
+    ref = wl.generate_requests(params, prompts, jax.random.PRNGKey(0),
+                               rids=rids, max_new_tokens=4)
+    for name, mesh, _ in _mesh_cases():
+        ps = wl.shard_params(params, mesh)
+        out = wl.generate_requests(ps, prompts, jax.random.PRNGKey(0),
+                                   rids=rids, max_new_tokens=4, mesh=mesh)
+        for r, (a, b) in enumerate(zip(ref, out)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{name}: rid {r} tokens diverged")
+
+
+@needs_mesh
+def test_prng_fold_is_mesh_shape_independent():
+    """Property: the (seed, rid, stage_index) fold and the per-request
+    noise drawn from it never depend on the mesh shape — sharded keys
+    produce bitwise the same noise as host keys."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.launch.mesh import make_debug_mesh
+    from repro.parallel.mesh_exec import shard_batched_state
+
+    meshes = [make_debug_mesh(8, 1), make_debug_mesh(4, 2),
+              make_debug_mesh(2, 4), make_debug_mesh(1, 8)]
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           rids=st.lists(st.integers(0, 10_000), min_size=1, max_size=8,
+                         unique=True),
+           idx=st.integers(0, 15))
+    def prop(seed, rids, idx):
+        base = jax.random.PRNGKey(seed)
+        keys = stage_keys(base, rids, idx)
+        ref = np.asarray(
+            jax.vmap(lambda k: jax.random.normal(k, (4,)))(keys))
+        for mesh in meshes:
+            ks = shard_batched_state(keys, mesh)
+            with mesh:
+                noise = np.asarray(
+                    jax.vmap(lambda k: jax.random.normal(k, (4,)))(ks))
+            assert np.array_equal(ref, noise), mesh.shape
+        # key material itself is placement-invariant
+        assert np.array_equal(np.asarray(keys),
+                              np.asarray(shard_batched_state(keys, meshes[1])))
+
+    prop()
